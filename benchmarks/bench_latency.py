@@ -1,0 +1,50 @@
+"""Paper Table 3: forward/backward latency of the approximated linear.
+
+Apples-to-apples on this host (XLA:CPU): jitted fwd+bwd of one linear,
+exact vs WTA-CRS@0.3 (paper measures ~20% slowdown per op from sampling
+overhead on GPU and recovers throughput at larger batch).  Also times the
+Pallas kernels in interpret mode purely for smoke visibility (interpret
+timings are NOT performance data; the TPU path is compiled natively).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_jit
+from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.core.linear import wtacrs_linear
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (8, 256, 512), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (512, 512),
+                          jnp.float32)
+
+    def make(policy_cfg):
+        def f(hh, ww, kk):
+            z = wtacrs_linear(hh, ww, key=kk, cfg=policy_cfg)
+            return jnp.sum(z * z)
+        return jax.jit(jax.value_and_grad(f, argnums=(0, 1)))
+
+    kk = jax.random.PRNGKey(2)
+    t_exact = time_jit(make(WTACRSConfig(kind=EstimatorKind.EXACT)),
+                       h, w, kk)
+    emit("table3_linear_fwdbwd[exact]", t_exact, "baseline")
+    for budget in (0.3, 0.1):
+        t = time_jit(make(WTACRSConfig(kind=EstimatorKind.WTA_CRS,
+                                       budget=budget)), h, w, kk)
+        emit(f"table3_linear_fwdbwd[wtacrs@{budget}]", t,
+             f"ratio_vs_exact={t / t_exact:.2f}")
+
+    # Pallas kernels (interpret mode -- correctness path visibility only)
+    from repro.kernels import ops
+    x = jax.random.normal(key, (512, 512), jnp.float32)
+    t = time_jit(lambda: ops.row_norms(x, block_rows=128, block_d=128))
+    emit("kernel_row_norms_interp", t, "interpret-mode (not perf)")
+    idx = jnp.arange(128, dtype=jnp.int32)
+    sc = jnp.ones((128,), jnp.float32)
+    t = time_jit(lambda: ops.gather_scale(x, idx, sc, block_d=128))
+    emit("kernel_gather_scale_interp", t, "interpret-mode (not perf)")

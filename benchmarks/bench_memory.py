@@ -1,0 +1,74 @@
+"""Paper Table 2 + Fig. 6: activation-memory reduction and max batch.
+
+Ground truth is the jaxpr-level residual audit (what must live between
+forward and backward), which is exactly the quantity the paper's peak-
+memory table measures on GPU.  Reported per policy:
+
+  Full / LoRA / WTA-CRS@0.3 / WTA-CRS@0.1 / LoRA+WTA-CRS@{0.3,0.1}
+
+plus the implied max batch under a fixed activation budget (Fig. 6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax._src.ad_checkpoint import saved_residuals
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.core.lora import LoRAConfig
+from repro.models import common as cm
+from repro.models import registry
+
+
+def residual_bytes(cfg, params, batch, policy) -> int:
+    def lf(p):
+        return registry.loss_fn(cfg, p, batch, policy,
+                                key=jax.random.PRNGKey(0))[0]
+    total = 0
+    for aval, name in saved_residuals(lf, params):
+        if "argument" in str(name):
+            continue
+        total += aval.size * aval.dtype.itemsize
+    return total
+
+
+def policies():
+    wta3 = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.3, min_rows=4)
+    wta1 = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.1, min_rows=4)
+    lora = LoRAConfig(rank=8, enabled=True)
+    return [
+        ("full", cm.Policy()),
+        ("lora", cm.Policy(lora=lora)),
+        ("wtacrs@0.3", cm.Policy(wtacrs=wta3, remat="wtacrs_names")),
+        ("wtacrs@0.1", cm.Policy(wtacrs=wta1, remat="wtacrs_names")),
+        ("lora+wtacrs@0.3", cm.Policy(wtacrs=wta3, lora=lora,
+                                      remat="wtacrs_names")),
+        ("lora+wtacrs@0.1", cm.Policy(wtacrs=wta1, lora=lora,
+                                      remat="wtacrs_names")),
+    ]
+
+
+def run():
+    cfg = get_config("qwen2.5-3b", reduced=True)
+    params, _ = registry.init_params(cfg, jax.random.PRNGKey(0))
+    batch = registry.make_synthetic_batch(cfg, 4, 128, jax.random.PRNGKey(1))
+
+    base = None
+    results = {}
+    for name, pol in policies():
+        b = residual_bytes(cfg, params, batch, pol)
+        results[name] = b
+        if name == "full":
+            base = b
+        emit(f"table2_activation_bytes[{name}]", 0.0,
+             f"bytes={b} compression={base / b:.2f}x")
+
+    # Fig. 6: max batch under a fixed activation budget (activations scale
+    # linearly in batch; params/optimizer excluded as in the paper's plot)
+    budget = 8 * base   # pretend the device fits 8x the full-policy batch-4
+    for name, b in results.items():
+        per_sample = b / 4
+        emit(f"fig6_max_batch[{name}]", 0.0,
+             f"max_batch={int(budget / per_sample)}")

@@ -1,0 +1,28 @@
+"""Roofline summary over the dry-run artifacts (EXPERIMENTS.md §Roofline
+reads the same data; this emits the machine-readable CSV)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit
+from repro.launch import roofline
+
+
+def run():
+    d = "experiments/dryrun"
+    if not os.path.isdir(d) or not os.listdir(d):
+        emit("roofline", 0.0, "SKIPPED: run repro.launch.dryrun first")
+        return
+    rows = roofline.summarize(d)
+    ok = [r for r in rows if r["status"] == "ok"]
+    for r in ok:
+        emit(f"roofline[{r['arch']}|{r['shape']}|{r['mesh']}]",
+             r["step_time_bound_s"] * 1e6,
+             f"dominant={r['dominant']} "
+             f"frac={r['roofline_fraction'] * 100:.1f}% "
+             f"useful={r['useful_flops_ratio'] * 100:.1f}%")
+    if ok:
+        emit("roofline_cells_ok", 0.0, f"count={len(ok)}")
+        for c in roofline.pick_hillclimb_cells(rows):
+            emit("roofline_hillclimb_pick", 0.0,
+                 f"{c['arch']}|{c['shape']} ({c['why']})")

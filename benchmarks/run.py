@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_estimators  -- Fig. 3 (Eq. 7 condition), Theorem 2 variance
+  bench_memory      -- Table 2 (activation memory), Fig. 6 (max batch)
+  bench_convergence -- Table 1 (accuracy), Fig. 7 (budget), Fig. 8
+                       (estimator ablation)
+  bench_latency     -- Table 3 (linear fwd/bwd latency)
+  bench_roofline    -- roofline terms per (arch x shape x mesh) cell
+"""
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = ["bench_estimators", "bench_memory", "bench_convergence",
+           "bench_latency", "bench_roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes")
+    args = ap.parse_args()
+    mods = MODULES
+    if args.only:
+        keep = args.only.split(",")
+        mods = [m for m in MODULES if any(k in m for k in keep)]
+    print("name,us_per_call,derived")
+    failed = 0
+    for m in mods:
+        try:
+            importlib.import_module(f"benchmarks.{m}").run()
+        except Exception:
+            failed += 1
+            print(f"{m},0.0,ERROR")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,50 @@
+"""Multi-pod dry-run for one cell, end to end, with the roofline readout.
+
+    PYTHONPATH=src python examples/distributed_dryrun.py \
+        --arch dbrx-132b --shape train_4k --mesh multi
+
+Builds the 2x16x16 (or 16x16) production mesh on 512 host devices,
+lowers + compiles the paper-faithful WTA-CRS train/serve step with full
+DP/TP/EP shardings, and prints memory/cost/collective analysis — exactly
+what the full sweep (python -m repro.launch.dryrun --all) records per
+cell.
+"""
+import argparse
+
+# MUST precede any jax import (device count locks at first init)
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import lower_cell               # noqa: E402
+from repro.launch.roofline import roofline_terms         # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="multi", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    rec, compiled, lowered = lower_cell(args.arch, args.shape,
+                                        args.mesh == "multi")
+    if rec["status"] != "ok":
+        print(rec)
+        return
+    m = rec["memory"]
+    print(f"cell: {args.arch} x {args.shape} x {args.mesh}")
+    print(f"  per-device memory: args {m['argument_bytes'] / 2**30:.2f} GiB"
+          f" + temps {m['temp_bytes'] / 2**30:.2f} GiB")
+    print(f"  per-device FLOPs (trip-aware): {rec['cost']['flops']:.4g}")
+    print(f"  collectives: {rec['collectives']['counts']} "
+          f"({rec['collectives']['total_bytes'] / 2**30:.2f} GiB/device)")
+    rt = roofline_terms(rec)
+    print(f"  roofline: compute {rt['compute_s']:.4f}s | memory "
+          f"{rt['memory_s']:.4f}s | collective {rt['collective_s']:.4f}s")
+    print(f"  dominant: {rt['dominant']}  "
+          f"useful-FLOPs {rt['useful_flops_ratio'] * 100:.1f}%  "
+          f"roofline fraction {rt['roofline_fraction'] * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""End-to-end driver: LoRA + WTA-CRS fine-tuning with the dataset-level
+gradient-norm cache (Algorithm 1), fault-tolerant checkpointing, and
+automatic resume.
+
+    PYTHONPATH=src python examples/finetune_lora_wtacrs.py \
+        --arch xlstm-125m --steps 200 --ckpt-dir /tmp/wtacrs_ckpt
+
+Kill it at any point and re-run the same command: training resumes from
+the last durable checkpoint.  ``--full-size`` trains the ~125M published
+xLSTM config (the paper-style "train a ~100M model" run; budget a few
+hundred steps).
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.core.lora import LoRAConfig
+from repro.models import common as cm
+from repro.train import checkpoint, data, optim, znorm
+from repro.launch import train_steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/wtacrs_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--budget", type=float, default=0.3)
+    ap.add_argument("--full-size", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full_size)
+    policy = cm.Policy(
+        wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS,
+                            budget=args.budget, min_rows=4),
+        lora=LoRAConfig(rank=16, enabled=False),  # LoRA params are module-
+        # level in this framework; flip enabled=True for adapter training
+    )
+
+    n_data = 512
+    tags = znorm.collect_linear_tags(cfg)
+    print(f"{len(tags)} WTA-CRS'd linears; dataset cache over {n_data} "
+          f"samples")
+    ds = data.SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          n_samples=n_data, seed=0, branching=2)
+
+    state = train_steps.init_train_state(cfg, jax.random.PRNGKey(0),
+                                         znorm_tags=tags, n_dataset=n_data)
+    start = 0
+    if checkpoint.latest_step(args.ckpt_dir) is not None:
+        state, start = checkpoint.restore(args.ckpt_dir,
+                                          jax.eval_shape(lambda: state))
+        print(f"resumed from step {start}")
+
+    step = jax.jit(train_steps.make_train_step(
+        cfg, policy, optim.AdamWConfig(weight_decay=0.0,
+                                       grad_clip_norm=1.0),
+        optim.wsd(3e-3, total_steps=args.steps, warmup=10),
+        use_znorm_cache=True))
+    ckpt = checkpoint.AsyncCheckpointer(args.ckpt_dir, keep=3)
+
+    it = ds.epoch(args.batch)
+    t0 = time.perf_counter()
+    for s in range(start, args.steps):
+        try:
+            b = next(it)
+        except StopIteration:
+            it = ds.epoch(args.batch, shuffle_seed=s)
+            b = next(it)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        state, m = step(state, b)
+        if s % 10 == 0 or s == args.steps - 1:
+            dt = (time.perf_counter() - t0) / max(s - start + 1, 1)
+            print(f"step {s:5d}  loss {float(m['loss']):.4f}  "
+                  f"{dt * 1e3:.0f} ms/step")
+        if (s + 1) % args.ckpt_every == 0:
+            ckpt.save(s + 1, state)
+    ckpt.wait()
+    checkpoint.save(args.ckpt_dir, args.steps, state)
+    print("final checkpoint written; re-run to verify resume is a no-op")
+
+
+if __name__ == "__main__":
+    main()

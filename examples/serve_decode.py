@@ -1,0 +1,67 @@
+"""Serve a model: batched prefill + greedy decode with KV/SSM caches.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch zamba2-2.7b \
+        --batch 4 --prompt-len 32 --gen 24
+
+Exercises the production serve path: prefill builds the caches, then
+single-token serve steps stream out a batch of continuations.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import common as cm
+from repro.models import registry
+from repro.launch import train_steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-2.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--full-size", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full_size)
+    if cfg.is_encdec:
+        raise SystemExit("use an LM arch for this example")
+    params, _ = registry.init_params(cfg, jax.random.PRNGKey(0))
+    policy = cm.Policy()
+
+    max_len = args.prompt_len + args.gen
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+
+    # prefill token-by-token into headroom-sized caches (the fused
+    # registry.prefill path emits caches sized to the prompt; serving
+    # wants headroom, so we stream the prompt through serve steps)
+    serve = jax.jit(train_steps.make_serve_step(cfg, policy))
+    states = registry.decode_state_init(cfg, args.batch, max_len)
+    t0 = time.perf_counter()
+    tok = prompts[:, 0]
+    for t in range(args.prompt_len - 1):
+        _, _, states = serve(params, prompts[:, t], jnp.asarray(t), states)
+    print(f"prefill {args.prompt_len} tokens x {args.batch} reqs: "
+          f"{time.perf_counter() - t0:.2f}s")
+
+    tok = prompts[:, -1]
+    out = []
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len - 1, max_len - 1):
+        tok, logits, states = serve(params, tok, jnp.asarray(t), states)
+        out.append(tok)
+    dt = time.perf_counter() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"decoded {args.gen} x {args.batch} tokens in {dt:.2f}s "
+          f"({args.gen * args.batch / dt:.1f} tok/s on this host)")
+    print("sample continuation ids:", gen[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Core WTA-CRS library: estimators, sampling plans, approximated linears."""
+from repro.core.config import (EstimatorKind, NormSource, WTACRSConfig,
+                               EXACT_CONFIG)
+from repro.core.plans import (SamplePlan, column_row_probabilities, crs_plan,
+                              det_topk_plan, wtacrs_plan, build_plan,
+                              optimal_c_size)
+from repro.core.estimators import (approx_matmul, apply_plan, exact_matmul,
+                                   crs_variance, wtacrs_variance_bound,
+                                   theorem2_condition,
+                                   empirical_estimator_stats)
+from repro.core.linear import wtacrs_linear, read_grad_norm_tap
+from repro.core.lora import LoRAConfig, init_lora_params, lora_linear
+
+__all__ = [
+    "EstimatorKind", "NormSource", "WTACRSConfig", "EXACT_CONFIG",
+    "SamplePlan", "column_row_probabilities", "crs_plan", "det_topk_plan",
+    "wtacrs_plan", "build_plan", "optimal_c_size",
+    "approx_matmul", "apply_plan", "exact_matmul", "crs_variance",
+    "wtacrs_variance_bound", "theorem2_condition",
+    "empirical_estimator_stats",
+    "wtacrs_linear", "read_grad_norm_tap",
+    "LoRAConfig", "init_lora_params", "lora_linear",
+]

@@ -1,0 +1,76 @@
+"""Configuration for the WTA-CRS estimator family.
+
+The paper (Liu & Wang et al., NeurIPS 2023) proposes WTA-CRS, an unbiased
+estimator for GEMM with reduced variance, used to sub-sample the activation
+matrix stored for the weight-gradient GEMM (Eq. 1c).  This module holds the
+configuration shared by the plan builders, the custom-vjp linear layer and
+the model integration layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class EstimatorKind(str, enum.Enum):
+    """Which estimator is used for the backward weight-gradient GEMM."""
+
+    EXACT = "exact"          # no approximation (full fine-tuning baseline)
+    CRS = "crs"              # iid column-row sampling, Drineas et al. (Eq. 5)
+    DET_TOPK = "det_topk"    # deterministic top-k, Adelman et al. (biased)
+    WTA_CRS = "wta_crs"      # the paper's estimator (Eq. 6)
+
+
+class NormSource(str, enum.Enum):
+    """Where the `z` term of the column-row probability (Eq. 3) comes from.
+
+    The optimal probability is p_i ∝ ||H_i,:|| * ||∇Z_i,:||, but ∇Z is not
+    available during the forward pass when the sub-sampling decision must be
+    made.  The paper caches per-sample gradient norms from the previous
+    optimizer step (Algorithm 1).  ``ACTIVATION_ONLY`` uses p_i ∝ ||H_i,:||
+    which requires no cache and is also unbiased (any distribution with
+    full support is unbiased; Eq. 3 is only optimal for variance).
+    """
+
+    ACTIVATION_ONLY = "activation_only"
+    CACHED_GRAD = "cached_grad"
+
+
+@dataclasses.dataclass(frozen=True)
+class WTACRSConfig:
+    """Static configuration for approximated linear layers.
+
+    Attributes:
+      kind: which estimator to use in the backward pass.
+      budget: normalized column-row pair budget k/|D| in (0, 1].  The paper
+        evaluates 0.3 and 0.1.
+      norm_source: see NormSource.
+      min_rows: never sample below this many rows (keeps tiny layers exact).
+      deterministic_fraction_cap: upper bound on |C|/k.  1.0 reproduces the
+        paper exactly (|C| chosen by Theorem 2); smaller values force some
+        stochastic budget, useful for ablations.
+      use_kernel: route the backward sampled GEMM through the Pallas kernel
+        (TPU target; interpret-mode on CPU) instead of plain jnp.
+    """
+
+    kind: EstimatorKind = EstimatorKind.WTA_CRS
+    budget: float = 0.3
+    norm_source: NormSource = NormSource.ACTIVATION_ONLY
+    min_rows: int = 8
+    deterministic_fraction_cap: float = 1.0
+    use_kernel: bool = False
+
+    def budget_rows(self, n_rows: int) -> int:
+        """Concrete k for a contraction dimension of size ``n_rows``."""
+        if self.kind == EstimatorKind.EXACT:
+            return n_rows
+        k = int(round(self.budget * n_rows))
+        k = max(self.min_rows, k)
+        return min(k, n_rows)
+
+    def with_kind(self, kind: EstimatorKind) -> "WTACRSConfig":
+        return dataclasses.replace(self, kind=kind)
+
+
+EXACT_CONFIG = WTACRSConfig(kind=EstimatorKind.EXACT, budget=1.0)

@@ -1,0 +1,93 @@
+"""Approximated GEMM estimators built on sampling plans.
+
+These are the pure "math" entry points used by tests, benchmarks and the
+variance analysis.  The production integration (activation sub-sampling in
+the backward pass of a linear layer) lives in ``repro.core.linear``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plans as plans_lib
+from repro.core.config import EstimatorKind, WTACRSConfig
+
+
+def exact_matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y)
+
+
+def apply_plan(x: jax.Array, y: jax.Array,
+               plan: plans_lib.SamplePlan) -> jax.Array:
+    """sum_t scale_t * X[:, i_t] Y[i_t, :]  ==  (X[:,idx]*scale) @ Y[idx,:]."""
+    x_sub = x[:, plan.idx] * plan.scale[None, :].astype(x.dtype)
+    y_sub = y[plan.idx, :]
+    return jnp.dot(x_sub, y_sub)
+
+
+def approx_matmul(x: jax.Array, y: jax.Array, cfg: WTACRSConfig,
+                  key: Optional[jax.Array] = None) -> jax.Array:
+    """Estimate X @ Y with cfg.kind using the optimal distribution (Eq. 3)."""
+    if cfg.kind == EstimatorKind.EXACT:
+        return exact_matmul(x, y)
+    m = x.shape[1]
+    k = cfg.budget_rows(m)
+    x_norms = jnp.linalg.norm(x.astype(jnp.float32), axis=0)
+    y_norms = jnp.linalg.norm(y.astype(jnp.float32), axis=1)
+    p = plans_lib.column_row_probabilities(x_norms, y_norms)
+    plan = plans_lib.build_plan(cfg.kind, p, k, key,
+                                cfg.deterministic_fraction_cap)
+    return apply_plan(x, y, plan)
+
+
+# ---------------------------------------------------------------------------
+# Theory utilities (used by the Fig. 3 / Theorem 2 benchmarks + tests)
+# ---------------------------------------------------------------------------
+
+def crs_variance(x: jax.Array, y: jax.Array, p: jax.Array, k: int) -> jax.Array:
+    """Closed-form total variance of the CRS estimator (Appendix C.1):
+
+        Var[g] = (1/k) [ sum_i ||X_:,i||^2 ||Y_i,:||^2 / p_i  -  ||XY||_F^2 ]
+    """
+    x32, y32 = x.astype(jnp.float32), y.astype(jnp.float32)
+    xn2 = jnp.sum(x32 * x32, axis=0)
+    yn2 = jnp.sum(y32 * y32, axis=1)
+    first = jnp.sum(xn2 * yn2 / jnp.maximum(p, 1e-30))
+    fro2 = jnp.sum(jnp.dot(x32, y32) ** 2)
+    return (first - fro2) / k
+
+
+def wtacrs_variance_bound(x: jax.Array, y: jax.Array, p: jax.Array,
+                          k: int) -> jax.Array:
+    """Upper bound from Eq. (20): Var[ĝ] <= (1-sum_C p)/(k-|C|) * k * Var[g]."""
+    order = jnp.argsort(-p)
+    csum = jnp.cumsum(p[order])
+    c_star = plans_lib.optimal_c_size(csum, k)
+    det_mass = jnp.where(c_star == 0, 0.0, csum[jnp.maximum(c_star - 1, 0)])
+    factor = (1.0 - det_mass) / jnp.maximum((k - c_star), 1).astype(p.dtype)
+    return factor * k * crs_variance(x, y, p, k)
+
+
+def theorem2_condition(p: jax.Array, k: int) -> jax.Array:
+    """Eq. (7): whether sum_C p_c > |C|/k at the optimal |C|.
+
+    Returns (holds, c_star, det_mass) for experimental analysis (Fig. 3).
+    """
+    order = jnp.argsort(-p)
+    csum = jnp.cumsum(p[order])
+    c_star = plans_lib.optimal_c_size(csum, k)
+    det_mass = jnp.where(c_star == 0, 0.0, csum[jnp.maximum(c_star - 1, 0)])
+    holds = det_mass > c_star.astype(p.dtype) / k
+    return holds, c_star, det_mass
+
+
+def empirical_estimator_stats(x: jax.Array, y: jax.Array, cfg: WTACRSConfig,
+                              key: jax.Array, n_trials: int = 64):
+    """Monte-Carlo mean/variance of an estimator; used in property tests."""
+    keys = jax.random.split(key, n_trials)
+    samples = jax.vmap(lambda kk: approx_matmul(x, y, cfg, kk))(keys)
+    mean = jnp.mean(samples, axis=0)
+    var = jnp.sum(jnp.var(samples, axis=0))
+    return mean, var

@@ -1,0 +1,259 @@
+"""WTA-CRS linear layer: exact forward, sub-sampled weight-gradient backward.
+
+This implements the paper's core mechanism (Sec. 3.2, Algorithm 1):
+
+    forward:   Z = H @ W                         (exact -> unbiased network)
+    backward:  dH = dZ @ W^T                     (exact)
+               dW = H'^T @ (dZ[idx] * scale)     (WTA-CRS estimate of H^T dZ)
+
+Only the sub-sampled H' (k rows of H), the k indices and the k scales are
+kept as residuals for the backward pass, instead of the full H.  This is
+where the activation-memory reduction comes from: for budget k = 0.3 n the
+per-linear stored activation shrinks 3.3x.
+
+Distribution design (DESIGN.md §Hardware-adaptation): sampling is
+PER-SAMPLE — each batch element draws its own k = budget*S column-row
+pairs over its S token rows.  The contraction sum decomposes over batch
+elements, each estimated unbiasedly, so the total stays unbiased; and
+because every op is elementwise in the batch dimension, data-parallel
+sharding keeps the whole plan+gather shard-local (a global top-|C| over
+the B*S dim would force an all-gather of the activations on every
+linear — measured 1.7 TB/device in the 16x16 dry-run).  The paper's own
+cache granularity is also per-sample (Algorithm 1), so this is the
+faithful SPMD expression of it.
+
+The column-row distribution (Eq. 3) is p_i ∝ ||H_i,:|| * ||dZ_i,:||.  dZ
+is unknown at forward time, so the caller may supply ``znorm`` — cached
+per-token gradient-norm estimates from the previous step (Algorithm 1's
+Cache).  The fresh norms are delivered back through the *gradient-norm
+tap*: the cotangent returned for ``znorm`` is the SQUARED per-token norm
+of dZ rather than a true derivative (sampling probabilities are treated
+as non-differentiable, exactly as in the paper).  Training code reads
+grads-of-znorm to refresh the cache (repro.train.znorm).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.core import plans as plans_lib
+from repro.core.config import EstimatorKind, NormSource, WTACRSConfig
+
+_EPS = 1e-30
+
+
+def _row_norms(x: jax.Array) -> jax.Array:
+    # f32-accumulating einsum: no materialized f32 copy of x
+    sq = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    return jnp.sqrt(sq)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp core: batched (B, S, D) x (D, E), per-sample plans
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _sampled_linear(h: jax.Array, w: jax.Array, key_data: jax.Array,
+                    znorm: jax.Array, cfg: WTACRSConfig) -> jax.Array:
+    return jnp.einsum("bsd,de->bse", h, w)
+
+
+def _make_plans(h, znorm, key_data, cfg: WTACRSConfig, k: int):
+    """Per-sample plans.  h: (B,S,D), znorm: (B,S) -> idx/scale (B,k)."""
+    b = h.shape[0]
+    h_norms = _row_norms(h)                                   # (B, S)
+    weights = h_norms * znorm.astype(jnp.float32)
+    totals = jnp.sum(weights, axis=-1, keepdims=True)
+    uniform = jnp.full_like(weights, 1.0 / weights.shape[-1])
+    p = jnp.where(totals > 0, weights / jnp.maximum(totals, _EPS), uniform)
+
+    if cfg.kind == EstimatorKind.DET_TOPK:
+        plan = jax.vmap(lambda pr: plans_lib.det_topk_plan(pr, k))(p)
+        return plan.idx, plan.scale
+    key = jax.random.wrap_key_data(key_data)
+    keys = jax.random.split(key, b)
+    if cfg.kind == EstimatorKind.CRS:
+        plan = jax.vmap(lambda pr, kk: plans_lib.crs_plan(pr, k, kk))(
+            p, keys)
+    else:
+        plan = jax.vmap(lambda pr, kk: plans_lib.wtacrs_plan(
+            pr, k, kk, cfg.deterministic_fraction_cap))(p, keys)
+    return plan.idx, plan.scale
+
+
+def _rowgather(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """(B, S, D)[B, k] -> (B, k, D) without broadcasting an index tensor
+    to the output shape (take_along_axis materializes u32[B,k,D])."""
+    return jax.vmap(lambda xb, ib: jnp.take(xb, ib, axis=0))(x, idx)
+
+
+def _sampled_linear_fwd(h, w, key_data, znorm, cfg: WTACRSConfig):
+    z = jnp.einsum("bsd,de->bse", h, w)
+    k = cfg.budget_rows(h.shape[1])
+    idx, scale = _make_plans(h, znorm, key_data, cfg, k)
+    h_sub = _rowgather(h, idx)                                # (B, k, D)
+    # Name the kept tensors so remat policies can save exactly these.
+    h_sub = checkpoint_name(h_sub, "wtacrs_saved")
+    idx = checkpoint_name(idx, "wtacrs_saved")
+    scale = checkpoint_name(scale, "wtacrs_saved")
+    return z, (h_sub, idx, scale, w, key_data.shape)
+
+
+def _sampled_linear_bwd(cfg: WTACRSConfig, residuals, dz):
+    h_sub, idx, scale, w, key_shape = residuals
+    dh = jnp.einsum("bse,de->bsd", dz, w)
+    dz_sub = _rowgather(dz, idx)                               # (B, k, E)
+    dz_sub = dz_sub * scale[:, :, None].astype(dz_sub.dtype)
+    if cfg.use_kernel and h_sub.shape[0] == 1:
+        from repro.kernels import ops as kernel_ops
+        dw = kernel_ops.sampled_matmul(h_sub[0], dz[0], idx[0], scale[0])
+    else:
+        dw = jax.lax.dot_general(
+            h_sub, dz_sub, (((0, 1), (0, 1)), ((), ())),
+            preferred_element_type=jnp.float32)
+    dw = dw.astype(w.dtype)
+    # Gradient-norm tap: NOT a derivative (see module doc).  Squared norms
+    # so per-sample caches broadcast over positions sum correctly.
+    tap = jnp.einsum("bse,bse->bs", dz, dz,
+                     preferred_element_type=jnp.float32)       # (B, S)
+    dkey = np.zeros(key_shape, dtype=jax.dtypes.float0)
+    return dh.astype(h_sub.dtype), dw, dkey, tap
+
+
+_sampled_linear.defvjp(_sampled_linear_fwd, _sampled_linear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Shared-plan variant: several weights consuming the SAME activation
+# (q/k/v, SwiGLU wi/wg, expert wi/wg) share one plan and ONE stored H'.
+# Beyond-paper memory optimization: the paper stores a sub-sampled copy
+# per op; sharing cuts attention-input residuals 3x and gated-MLP 2x at
+# identical unbiasedness (each dW_i is the Eq. 6 estimator under the
+# same, valid plan; only the variance coupling across the three
+# estimates changes, not any mean).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _sampled_linear_shared(h, ws, key_data, znorm, cfg: WTACRSConfig):
+    return tuple(jnp.einsum("bsd,de->bse", h, w) for w in ws)
+
+
+def _sampled_linear_shared_fwd(h, ws, key_data, znorm, cfg: WTACRSConfig):
+    zs = tuple(jnp.einsum("bsd,de->bse", h, w) for w in ws)
+    k = cfg.budget_rows(h.shape[1])
+    idx, scale = _make_plans(h, znorm, key_data, cfg, k)
+    h_sub = _rowgather(h, idx)
+    h_sub = checkpoint_name(h_sub, "wtacrs_saved")
+    idx = checkpoint_name(idx, "wtacrs_saved")
+    scale = checkpoint_name(scale, "wtacrs_saved")
+    return zs, (h_sub, idx, scale, ws, key_data.shape)
+
+
+def _sampled_linear_shared_bwd(cfg: WTACRSConfig, residuals, dzs):
+    h_sub, idx, scale, ws, key_shape = residuals
+    dh = sum(jnp.einsum("bse,de->bsd", dz, w)
+             for dz, w in zip(dzs, ws))
+    dws = []
+    tap = None
+    for dz in dzs:
+        dz_sub = _rowgather(dz, idx)
+        dz_sub = dz_sub * scale[:, :, None].astype(dz_sub.dtype)
+        dw = jax.lax.dot_general(
+            h_sub, dz_sub, (((0, 1), (0, 1)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dws.append(dw.astype(ws[0].dtype))
+        t = jnp.einsum("bse,bse->bs", dz, dz,
+                       preferred_element_type=jnp.float32)
+        tap = t if tap is None else tap + t
+    dkey = np.zeros(key_shape, dtype=jax.dtypes.float0)
+    return dh.astype(h_sub.dtype), tuple(dws), dkey, tap
+
+
+_sampled_linear_shared.defvjp(_sampled_linear_shared_fwd,
+                              _sampled_linear_shared_bwd)
+
+
+def wtacrs_linear_shared(h: jax.Array, ws, key=None, znorm=None,
+                         cfg: WTACRSConfig = WTACRSConfig(),
+                         biases=None):
+    """Shared-plan multi-linear: returns one output per weight in ``ws``.
+
+    h: (..., S, d_in); every w: (d_in, d_out_i)."""
+    lead = h.shape[:-1]
+    squeeze = h.ndim == 2
+    h3 = h[None] if squeeze else h.reshape((-1,) + h.shape[-2:])
+    b, s = h3.shape[0], h3.shape[1]
+
+    if cfg.kind == EstimatorKind.EXACT or cfg.budget_rows(s) >= s:
+        zs = tuple(jnp.einsum("...sd,de->...se", h, w) for w in ws)
+    else:
+        zn = (jnp.ones((b, s), jnp.float32) if znorm is None
+              else znorm.reshape((b, s)).astype(jnp.float32))
+        if key is None:
+            raise ValueError("shared-plan estimator requires a PRNG key")
+        z3s = _sampled_linear_shared(h3, tuple(ws),
+                                     jax.random.key_data(key), zn, cfg)
+        zs = tuple(z[0] if squeeze else z.reshape(lead + (z.shape[-1],))
+                   for z in z3s)
+    if biases is not None:
+        zs = tuple(z if bias is None else z + bias
+                   for z, bias in zip(zs, biases))
+    return zs
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def wtacrs_linear(h: jax.Array, w: jax.Array,
+                  key: Optional[jax.Array] = None,
+                  znorm: Optional[jax.Array] = None,
+                  cfg: WTACRSConfig = WTACRSConfig(),
+                  bias: Optional[jax.Array] = None) -> jax.Array:
+    """Linear layer with WTA-CRS-approximated weight gradient.
+
+    Args:
+      h: activations (..., S, d_in); sampling happens over S per leading
+        index.  2-D inputs (n, d_in) are treated as one sample of n rows.
+      w: weight (d_in, d_out).
+      key: PRNG key for the sampling plans (not needed for EXACT/DET_TOPK).
+      znorm: gradient-norm estimates, shape h.shape[:-1] (or broadcastable
+        per-sample values); None -> activation-only probabilities.
+      cfg: estimator configuration.
+      bias: optional (d_out,), added exactly.
+    """
+    lead = h.shape[:-1]
+    d_in = h.shape[-1]
+    squeeze = h.ndim == 2
+    h3 = h[None] if squeeze else h.reshape((-1,) + h.shape[-2:])
+    b, s = h3.shape[0], h3.shape[1]
+
+    if cfg.kind == EstimatorKind.EXACT or cfg.budget_rows(s) >= s:
+        z = jnp.einsum("...sd,de->...se", h, w)
+    else:
+        if znorm is None:
+            zn = jnp.ones((b, s), jnp.float32)
+        else:
+            zn = znorm.reshape((b, s)).astype(jnp.float32)
+        if key is None:
+            if cfg.kind != EstimatorKind.DET_TOPK:
+                raise ValueError(f"estimator {cfg.kind} requires a PRNG key")
+            key = jax.random.PRNGKey(0)
+        key_data = jax.random.key_data(key)
+        z3 = _sampled_linear(h3, w, key_data, zn, cfg)
+        z = z3[0] if squeeze else z3.reshape(lead + (w.shape[-1],))
+
+    if bias is not None:
+        z = z + bias
+    return z
+
+
+def read_grad_norm_tap(grads_znorm: jax.Array) -> jax.Array:
+    """Convert tap cotangents (squared norms) into gradient norms."""
+    return jnp.sqrt(jnp.maximum(grads_znorm, 0.0))

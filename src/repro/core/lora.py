@@ -1,0 +1,63 @@
+"""LoRA (Hu et al., 2021) as a composable wrapper around (WTA-CRS) linears.
+
+The paper combines WTA-CRS with LoRA (LoRA reduces optimizer-state memory,
+WTA-CRS reduces activation memory; the two are orthogonal).  We mirror
+that: a LoRA-augmented linear computes
+
+    z = h @ W  +  (alpha / r) * (h @ A) @ B
+
+with W frozen (no gradient) and only A (d_in, r), B (r, d_out) trainable.
+The frozen path's weight gradient is skipped entirely via stop_gradient on
+W; the LoRA path's GEMMs are small (rank r), so their activations are
+cheap, but `h @ A`'s backward still needs H — so the LoRA down-projection
+is also WTA-CRS'd when enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import WTACRSConfig
+from repro.core.linear import wtacrs_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 32
+    alpha: float = 32.0
+    enabled: bool = False
+
+    @property
+    def scaling(self) -> float:
+        return self.alpha / max(self.rank, 1)
+
+
+def init_lora_params(key: jax.Array, d_in: int, d_out: int, rank: int,
+                     dtype=jnp.float32):
+    """A ~ N(0, 1/r), B = 0 (so the adapter starts as identity)."""
+    a = jax.random.normal(key, (d_in, rank), dtype) / jnp.sqrt(rank).astype(dtype)
+    b = jnp.zeros((rank, d_out), dtype)
+    return {"lora_a": a, "lora_b": b}
+
+
+def lora_linear(h: jax.Array, w: jax.Array, lora_a: jax.Array,
+                lora_b: jax.Array, lora_cfg: LoRAConfig,
+                key: Optional[jax.Array] = None,
+                znorm: Optional[jax.Array] = None,
+                cfg: WTACRSConfig = WTACRSConfig(),
+                bias: Optional[jax.Array] = None) -> jax.Array:
+    """Frozen base linear + trainable low-rank update, both memory-efficient.
+
+    The base weight is stop_gradient'ed: its dW is never formed, and because
+    the WTA-CRS path only stores H' for dW, the frozen base path stores
+    nothing beyond what dH needs (just W itself).
+    """
+    w_frozen = jax.lax.stop_gradient(w)
+    z = wtacrs_linear(h, w_frozen, key=key, znorm=znorm, cfg=cfg, bias=bias)
+    key_a = None if key is None else jax.random.fold_in(key, 1)
+    down = wtacrs_linear(h, lora_a, key=key_a, znorm=znorm, cfg=cfg)
+    z = z + jnp.dot(down, lora_b) * lora_cfg.scaling
+    return z

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the WTA-CRS hot spots.
+
+Kernels (each: <name>.py kernel body, ops.py jit'd wrapper, ref.py oracle):
+  * row_norms      -- per-row L2 norms feeding the column-row distribution
+  * gather_scale   -- scalar-prefetched sub-sample gather (build H')
+  * sampled_matmul -- fused gather+scale+GEMM for dW = H'^T (dZ[idx]*scale)
+  * flash_attention -- fused online-softmax attention fwd (serving path;
+                       p-blocks stay in VMEM -- the §Perf next-step fix)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused flash attention (forward / serving path).
+
+The §Perf analysis (EXPERIMENTS.md, dbrx cell) shows the dominant
+residual memory term is flash p-block HBM traffic — the pure-JAX online
+softmax materializes every (bq, bk) probability block.  This kernel
+keeps the whole online-softmax state (m, l, acc) and the p-blocks in
+VMEM; only Q/K/V tiles stream from HBM, which is the true flash-
+attention roofline.
+
+Layout: q/k/v are (BH, S, Dh) with the GQA group resolved by the K/V
+BlockSpec index maps (kv head = q head // group), so grouped heads read
+the same K/V tiles without materializing a repeated copy.
+
+Grid: (BH, nq, nk) with nk innermost; the causal upper triangle is
+skipped via pl.when (no MXU work, no HBM reads are wasted on fully
+masked blocks thanks to the revisiting pipeline semantics).
+
+MXU alignment: bq/bk multiples of 128 and Dh in {64, 80, 128} pad to
+lanes on real hardware; tests exercise interpret mode with small blocks.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, nk: int, causal: bool, scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    should_run = True
+    if causal:
+        # block row i attends to block cols j with j*bk <= i*bq + bq-1
+        should_run = j * bk <= i * bq + bq - 1
+
+    @pl.when(should_run)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                     # (bq, bk)
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        group: int = 1, causal: bool = True,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, Dh); k, v: (BKVH, Skv, Dh) with BH = BKVH * group.
+
+    The K/V index maps divide the head index by ``group`` so GQA heads
+    share tiles.  Returns (BH, Sq, Dh).
+    """
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0
+    grid = (bh, sq // bq, skv // bk)
+    scale = 1.0 / math.sqrt(dh)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, nk=grid[2],
+                          causal=causal, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: build H' = H[idx] * scale — the sub-sample gather.
+
+This is the forward-pass half of WTA-CRS: once the sampling plan is known,
+the k kept rows of the activation are gathered (and optionally scaled)
+into the compact residual H'.  XLA lowers row-gathers to a serial chain of
+dynamic-slices; on TPU the idiomatic form is a scalar-prefetched Pallas
+kernel — the index vector rides in SMEM ahead of the grid, and each grid
+step's BlockSpec index_map *selects its source block from the prefetched
+index*, so the gather becomes the same HBM->VMEM DMA schedule as a dense
+copy, just with a permuted row order.
+
+Grid: (k // block_rows_out is not possible since rows are arbitrary) ->
+(k, d // block_d) with one source row per grid step.  Row blocks of 1 are
+fine on TPU for pure-copy kernels (no MXU involvement); the d-tiling keeps
+each DMA chunk VMEM-sized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, x_ref, scale_ref, o_ref):
+    t = pl.program_id(0)
+    o_ref[...] = (x_ref[...].astype(jnp.float32)
+                  * scale_ref[t]).astype(o_ref.dtype)
+
+
+def gather_scale(x: jax.Array, idx: jax.Array, scale: jax.Array, *,
+                 block_d: int = 512, interpret: bool = False) -> jax.Array:
+    """Return (k, d) = x[idx] * scale[:, None], dtype of x."""
+    n, d = x.shape
+    k = idx.shape[0]
+    block_d = min(block_d, d)
+    grid = (k, d // block_d)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_d),
+                             lambda t, j, idx_ref: (idx_ref[t], j)),
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+            ],
+            out_specs=pl.BlockSpec((1, block_d), lambda t, j, idx_ref: (t, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((k, d), x.dtype),
+        interpret=interpret,
+    )(idx, x, scale)

@@ -1,0 +1,107 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles:
+  * padding to block multiples (zero rows contribute nothing to norms or
+    GEMMs; padded index slots point at row 0 with scale 0),
+  * interpret-mode selection: on CPU backends the kernels execute via the
+    Pallas interpreter (correctness path); on TPU they compile natively,
+  * dtype policy: accumulation in f32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gather_scale as _gather
+from repro.kernels import row_norms as _norms
+from repro.kernels import sampled_matmul as _smm
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+
+def _pad_cols(x: jax.Array, mult: int) -> jax.Array:
+    d = x.shape[1]
+    pad = (-d) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_d",
+                                             "interpret"))
+def row_norms(x: jax.Array, *, block_rows: int = 256, block_d: int = 512,
+              interpret: bool | None = None) -> jax.Array:
+    """Per-row L2 norms (f32) of (n, d) via the Pallas reduction kernel."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = x.shape[0]
+    block_rows = min(block_rows, n)
+    block_d = min(block_d, x.shape[1])
+    xp = _pad_cols(_pad_rows(x, block_rows), block_d)
+    out = _norms.row_norms(xp, block_rows=block_rows, block_d=block_d,
+                           interpret=interpret)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gather_scale(x: jax.Array, idx: jax.Array, scale: jax.Array, *,
+                 block_d: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
+    """(k, d) = x[idx] * scale[:, None] via scalar-prefetch gather."""
+    if interpret is None:
+        interpret = _on_cpu()
+    block_d = min(block_d, x.shape[1])
+    xp = _pad_cols(x, block_d)
+    out = _gather.gather_scale(xp, idx.astype(jnp.int32),
+                               scale.astype(jnp.float32),
+                               block_d=block_d, interpret=interpret)
+    return out[:, :x.shape[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def sampled_matmul(hsub: jax.Array, dz: jax.Array, idx: jax.Array,
+                   scale: jax.Array, *, bm: int = 128, bn: int = 128,
+                   bk: int = 128, interpret: bool | None = None) -> jax.Array:
+    """dW = hsub^T @ (dz[idx] * scale) with the gather fused into the GEMM."""
+    if interpret is None:
+        interpret = _on_cpu()
+    k, d_in = hsub.shape
+    d_out = dz.shape[1]
+    bm, bn, bk = min(bm, d_in), min(bn, d_out), min(bk, k)
+    hp = _pad_cols(_pad_rows(hsub, bk), bm)
+    dzp = _pad_cols(dz, bn)
+    pad_k = (-k) % bk
+    idxp = jnp.concatenate(
+        [idx.astype(jnp.int32), jnp.zeros((pad_k,), jnp.int32)])
+    scalep = jnp.concatenate(
+        [scale.astype(jnp.float32), jnp.zeros((pad_k,), jnp.float32)])
+    out = _smm.sampled_matmul(hp, dzp, idxp, scalep, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+    return out[:d_in, :d_out]
+
+
+@functools.partial(jax.jit, static_argnames=("group", "causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        group: int = 1, causal: bool = True,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool | None = None) -> jax.Array:
+    """Fused flash attention forward (serving path); see
+    kernels/flash_attention.py.  q: (BH, Sq, Dh), k/v: (BKVH, Skv, Dh)."""
+    from repro.kernels import flash_attention as _fl
+    if interpret is None:
+        interpret = _on_cpu()
+    return _fl.flash_attention_fwd(q, k, v, group=group, causal=causal,
+                                   bq=bq, bk=bk, interpret=interpret)

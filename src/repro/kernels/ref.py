@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical definition the kernels are tested
+against (tests/test_kernels.py sweeps shapes and dtypes and
+assert_allclose's kernel output vs these).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_norms_ref(x: jax.Array) -> jax.Array:
+    """Per-row L2 norms of a (n, d) matrix, accumulated in f32."""
+    x32 = x.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(x32 * x32, axis=-1))
+
+
+def gather_scale_ref(x: jax.Array, idx: jax.Array,
+                     scale: jax.Array) -> jax.Array:
+    """H' = H[idx] * scale[:, None] — build the sub-sampled activation."""
+    return (x[idx].astype(jnp.float32)
+            * scale[:, None].astype(jnp.float32)).astype(x.dtype)
+
+
+def sampled_matmul_ref(hsub: jax.Array, dz: jax.Array, idx: jax.Array,
+                       scale: jax.Array) -> jax.Array:
+    """dW = H'^T @ (dZ[idx] * scale): the WTA-CRS weight-gradient GEMM.
+
+    hsub: (k, d_in) sub-sampled activations (unscaled).
+    dz:   (n, d_out) full output gradient; only rows idx are touched.
+    idx:  (k,) row indices into dz.
+    scale:(k,) per-slot estimator scales.
+    Returns (d_in, d_out) in f32.
+    """
+    dz_sub = dz[idx].astype(jnp.float32) * scale[:, None].astype(jnp.float32)
+    return jnp.dot(hsub.astype(jnp.float32).T, dz_sub)
+
+
+def flash_attention_fwd_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                            group: int = 1, causal: bool = True
+                            ) -> jax.Array:
+    """O(S^2) oracle for the fused flash kernel.  q: (BH, Sq, Dh);
+    k/v: (BKVH, Skv, Dh), kv head = q head // group."""
+    import math
+    bh, sq, dh = q.shape
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, kk.shape[1]), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)

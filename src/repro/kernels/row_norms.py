@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: per-row L2 norms of a (n, d) matrix.
+
+Used to build the column-row probabilities (Eq. 3) in one pass over the
+activation without materializing x*x.  Tiled as (block_rows, block_d)
+VMEM blocks; partial sums of squares accumulate in a f32 VMEM scratch
+across the d-grid dimension, with the sqrt applied on the last d-step.
+
+TPU notes: block_d should be a multiple of 128 (lane width) and
+block_rows a multiple of 8 (sublane) for full vreg utilization; the
+reduction across lanes maps onto the VPU's intra-vreg reduce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _row_norms_kernel(x_ref, o_ref, acc_ref, *, nsteps: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.sum(x * x, axis=1)
+
+    @pl.when(j == nsteps - 1)
+    def _finish():
+        o_ref[...] = jnp.sqrt(acc_ref[...]).astype(o_ref.dtype)
+
+
+def row_norms(x: jax.Array, *, block_rows: int = 256, block_d: int = 512,
+              interpret: bool = False) -> jax.Array:
+    """Per-row L2 norm, f32 output.  x must tile evenly (ops.py pads)."""
+    n, d = x.shape
+    block_rows = min(block_rows, n)
+    block_d = min(block_d, d)
+    grid = (n // block_rows, d // block_d)
+    return pl.pallas_call(
+        functools.partial(_row_norms_kernel, nsteps=grid[1]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, block_d), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_rows,), jnp.float32)],
+        interpret=interpret,
+    )(x)

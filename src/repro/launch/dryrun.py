@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. assembles abstract train state / decode state (ShapeDtypeStruct,
+     zero allocation) + input specs,
+  3. jit(...).lower(...).compile() with explicit in/out shardings,
+  4. records memory_analysis(), cost_analysis() and the per-collective
+     byte totals parsed from the compiled HLO,
+  5. writes experiments/dryrun/<arch>__<shape>__<mesh>[__tag].json.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --all
+      PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
+          --shape train_4k --mesh single
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.base import SHAPES, shape_applicable
+from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.models import common as cm
+from repro.models import registry
+from repro.train import optim
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_lib
+from repro.launch import train_steps
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO shape literal like 'bf16[16,1024]{1,0}' or a
+    tuple '(f32[8,128], u32[])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in the compiled HLO.
+
+    Parses lines like:
+      %ag = bf16[16,4096]{...} all-gather(%x), replica_groups=...
+    Output shape is a good proxy for payload (all-gather: full gathered
+    bytes; reduce-scatter: scattered output; all-reduce: tensor size).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.split(" = ", 1)
+        if len(eq) != 2:
+            continue
+        rhs = eq[1]
+        opm = re.match(r"([\(\)\w\[\],{}:#\* ]+?)\s+([\w-]+)\(", rhs)
+        if not opm:
+            continue
+        opname = opm.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-"):
+                # exclude "-start"/"-done" double counting: count starts
+                if opname.endswith("-done"):
+                    base = None
+                else:
+                    base = c
+                break
+        if base is None:
+            continue
+        out[base] += _shape_bytes(opm.group(1))
+        counts[base] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def dryrun_policy() -> cm.Policy:
+    """The paper-faithful production policy: WTA-CRS@0.3 on every linear,
+    with the remat policy that keeps exactly the sub-sampled activations
+    (checkpoint_name 'wtacrs_saved') and the per-layer carries."""
+    return cm.Policy(wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS,
+                                         budget=0.3),
+                     remat="wtacrs_names")
+
+
+def exact_policy() -> cm.Policy:
+    return cm.Policy(wtacrs=WTACRSConfig(kind=EstimatorKind.EXACT),
+                     remat="wtacrs_names")
+
+
+MICROBATCHES = 8        # gradient-accumulation splits for train cells
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               policy: Optional[cm.Policy] = None,
+               flash_block: Optional[int] = None,
+               microbatches: Optional[int] = None,
+               optimized: bool = False):
+    """Lower+compile one cell; returns (record, compiled, lowered).
+
+    ``optimized=True`` applies the beyond-paper §Perf settings: MoE
+    capacity sharded over the data axes with group-local dispatch, and
+    triangular (lower-triangle-only) flash attention.
+    """
+    import dataclasses as dc
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}, None, None
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    if policy is None:
+        policy = dryrun_policy()
+    if optimized:
+        dp = mesh_lib.data_axes(mesh)
+        policy = dc.replace(
+            policy, moe_pspec=("model", dp),
+            moe_groups=mesh_lib.mesh_size(mesh, dp),
+            flash_mode="triangular")
+    if shape.kind != "train":
+        # estimator only affects training; serve path is exact, and
+        # serving streams bf16 weights (decode is weight-bound — §Perf)
+        policy = dc.replace(policy, wtacrs=WTACRSConfig(
+            kind=EstimatorKind.EXACT))
+        cfg = dc.replace(cfg, param_dtype="bfloat16")
+    if flash_block:
+        policy = dc.replace(policy, flash_block=flash_block)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            state, axes = train_steps.abstract_train_state(cfg)
+            state_sh = train_steps.train_state_shardings(
+                cfg, state, axes, mesh)
+            batch = registry.train_batch_specs(cfg, shape.global_batch,
+                                               shape.seq_len)
+            batch_sh = shard_lib.batch_shardings(batch, mesh)
+            step_fn = train_steps.make_train_step(
+                cfg, policy, optim.AdamWConfig(),
+                optim.linear_warmup_constant(1e-4),
+                microbatches=(microbatches if microbatches is not None
+                              else MICROBATCHES),
+                data_axes=mesh_lib.data_axes(mesh))
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+            ).lower(state, batch)
+        elif shape.kind == "prefill":
+            params, axes = registry.abstract_params(cfg)
+            p_sh = shard_lib.param_shardings(
+                axes, params, mesh, rules=shard_lib.arch_rules(cfg, mesh))
+            batch = registry.train_batch_specs(cfg, shape.global_batch,
+                                               shape.seq_len)
+            batch_sh = shard_lib.batch_shardings(batch, mesh)
+            step_fn = train_steps.make_prefill_step(cfg, policy)
+            if cfg.is_encdec:
+                # enc-dec prefill: prime the cross caches (the decoder
+                # consumes them step-by-step)
+                from repro.models import encdec
+
+                def step_fn(params, batch):
+                    return encdec.prime_cross_cache(
+                        cfg, params, batch["frames"], policy)
+            lowered = jax.jit(
+                step_fn, in_shardings=(p_sh, batch_sh),
+                out_shardings=None).lower(params, batch)
+        else:  # decode
+            params, axes = registry.abstract_params(cfg)
+            p_sh = shard_lib.param_shardings(
+                axes, params, mesh, rules=shard_lib.arch_rules(cfg, mesh))
+            token, pos, states = registry.decode_specs(
+                cfg, shape.global_batch, shape.seq_len)
+            st_sh = shard_lib.decode_state_shardings(
+                states, mesh, shape.global_batch)
+            tok_sh = shard_lib.batch_shardings(
+                {"t": token}, mesh)["t"]
+            rep = shard_lib.replicated(mesh)
+            step_fn = train_steps.make_serve_step(cfg, policy)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, tok_sh, rep, st_sh),
+                out_shardings=(tok_sh, None, st_sh),
+            ).lower(params, token, pos, states)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    from repro.launch import hlo_cost
+    hlo_text = compiled.as_text()
+    hc = hlo_cost.module_cost(hlo_text)
+    coll = collective_bytes(hlo_text)
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "kind": shape.kind,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_per_device_bytes": (ma.argument_size_in_bytes
+                                      + ma.temp_size_in_bytes),
+        },
+        # trip-count-aware per-device costs (repro.launch.hlo_cost); XLA's
+        # own cost_analysis kept for reference — it counts loop bodies once
+        "cost": {"flops": hc.flops,
+                 "bytes_accessed": hc.bytes_accessed,
+                 "xla_flops_loopbody_once": ca.get("flops", 0.0),
+                 "xla_bytes_loopbody_once": ca.get("bytes accessed", 0.0)},
+        "collectives": {"total_bytes": hc.collective_bytes,
+                        "counts": hc.collective_counts,
+                        "loopbody_once": coll},
+    }
+    return record, compiled, lowered
+
+
+def run_cells(cells, out_dir: str, policy=None, tag: str = "",
+              optimized: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch, shape_name, multi_pod in cells:
+        mesh_name = "multi" if multi_pod else "single"
+        name = f"{arch}__{shape_name}__{mesh_name}"
+        if tag:
+            name += f"__{tag}"
+        print(f"[dryrun] {name} ...", flush=True)
+        try:
+            record, compiled, _ = lower_cell(arch, shape_name, multi_pod,
+                                             policy=policy,
+                                             optimized=optimized)
+            del compiled
+        except Exception as e:
+            record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                      "status": "error", "error": f"{type(e).__name__}: {e}",
+                      "traceback": traceback.format_exc()[-2000:]}
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+        status = record["status"]
+        extra = ""
+        if status == "ok":
+            mem = record["memory"]["peak_per_device_bytes"] / 2**30
+            extra = (f" mem/dev={mem:.2f}GiB "
+                     f"flops={record['cost']['flops']:.3g} "
+                     f"coll={record['collectives']['total_bytes']:.3g}B "
+                     f"compile={record['compile_s']}s")
+        print(f"[dryrun] {name}: {status}{extra}", flush=True)
+        results.append(record)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_NAMES + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES.keys()) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--exact", action="store_true",
+                    help="baseline exact-GEMM policy instead of WTA-CRS")
+    ap.add_argument("--optimized", action="store_true",
+                    help="beyond-paper perf settings (EXPERIMENTS §Perf)")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    policy = exact_policy() if args.exact else None
+    run_cells(cells, args.out, policy=policy, tag=args.tag,
+              optimized=args.optimized)
+
+
+if __name__ == "__main__":
+    main()

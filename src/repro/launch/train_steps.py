@@ -1,0 +1,234 @@
+"""Step builders: pjit train/prefill/serve steps + shard_map DP variant.
+
+These are the functions the trainer jits and the dry-run lowers.  All of
+them are pure (state, batch) -> (state, metrics) transformations; the
+distribution strategy is carried entirely by in/out shardings (GSPMD) or
+shard_map specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import registry
+from repro.train import compression, optim, znorm
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_lib
+
+
+def init_train_state(cfg: ArchConfig, key: jax.Array,
+                     znorm_tags=None, n_dataset: int = 0) -> Dict[str, Any]:
+    params, _ = registry.init_params(cfg, key)
+    state = {
+        "params": params,
+        "opt": optim.adamw_init(params),
+        "step": jnp.zeros((), jnp.int32),
+        "base_key": jax.random.key_data(jax.random.fold_in(key, 7)),
+    }
+    if znorm_tags:
+        state["znorm"] = znorm.init_cache(cfg, znorm_tags, n_dataset)
+    return state
+
+
+def abstract_train_state(cfg: ArchConfig, znorm_tags=None,
+                         n_dataset: int = 0):
+    """(ShapeDtypeStructs, logical axes info) without allocation."""
+    params, axes = registry.abstract_params(cfg)
+    opt = jax.eval_shape(optim.adamw_init, params)
+    state = {
+        "params": params,
+        "opt": opt,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "base_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+    }
+    if znorm_tags:
+        state["znorm"] = {
+            t: jax.ShapeDtypeStruct((cfg.n_repeats, n_dataset), jnp.float32)
+            for t in znorm_tags}
+    return state, axes
+
+
+def train_state_shardings(cfg, state, axes, mesh):
+    """Shardings for the full train state (opt mirrors params)."""
+    rules = shard_lib.arch_rules(cfg, mesh)
+    p_sh = shard_lib.param_shardings(axes, state["params"], mesh,
+                                     rules=rules)
+    rep = shard_lib.replicated(mesh)
+    sh = {
+        "params": p_sh,
+        "opt": optim.AdamWState(rep, p_sh, p_sh),
+        "step": rep,
+        "base_key": rep,
+    }
+    if "znorm" in state:
+        sh["znorm"] = {t: rep for t in state["znorm"]}
+    return sh
+
+
+def make_train_step(cfg: ArchConfig, policy: cm.Policy,
+                    opt_cfg: optim.AdamWConfig,
+                    schedule: Callable[[jax.Array], jax.Array],
+                    use_znorm_cache: bool = False,
+                    microbatches: int = 1,
+                    data_axes: Optional[tuple] = None):
+    """(state, batch) -> (state, metrics).  Paper-faithful WTA-CRS step.
+
+    With ``use_znorm_cache`` the batch must carry ``sample_ids`` and the
+    state a ``znorm`` cache; gradient-norm taps refresh it every step
+    (Algorithm 1).  ``microbatches`` > 1 scans gradient accumulation over
+    the leading batch split (activation memory / global batch trade).
+
+    ``data_axes``: mesh axes carrying the batch dim.  REQUIRED under SPMD
+    with microbatches > 1: without an explicit constraint GSPMD may shard
+    the microbatch (loop) dim of the reshaped batch across data devices,
+    making every device compute multiple shards' tokens (measured 8x FLOP
+    inflation on the 16x16 mesh).
+    """
+
+    def loss_with_znorms(params, znorms, batch, key):
+        return registry.loss_fn(cfg, params, batch, policy, key=key,
+                                znorms=znorms)
+
+    def grads_of(params, znorms, batch, key):
+        if use_znorm_cache:
+            (loss, aux), (gp, gz) = jax.value_and_grad(
+                loss_with_znorms, argnums=(0, 1), has_aux=True)(
+                params, znorms, batch, key)
+        else:
+            (loss, aux), gp = jax.value_and_grad(
+                loss_with_znorms, argnums=0, has_aux=True)(
+                params, None, batch, key)
+            gz = None
+        return loss, aux, gp, gz
+
+    def train_step(state, batch):
+        params = state["params"]
+        step = state["step"]
+        key = jax.random.wrap_key_data(state["base_key"])
+        key = jax.random.fold_in(key, step)
+
+        znorms = None
+        if use_znorm_cache:
+            znorms = znorm.gather(state["znorm"], batch["sample_ids"])
+        model_batch = {k: v for k, v in batch.items()
+                       if k != "sample_ids"}
+
+        if microbatches == 1:
+            loss, aux, gp, gz = grads_of(params, znorms, model_batch, key)
+        else:
+            if use_znorm_cache:
+                raise NotImplementedError(
+                    "znorm cache + gradient accumulation: gather/scatter "
+                    "per microbatch instead (trainer-level loop)")
+
+            def split(path, x):
+                name = str(path[-1].key) if path else ""
+                bdim = 1 if name == "positions3" else 0
+                b = x.shape[bdim] // microbatches
+                y = x.reshape(x.shape[:bdim] + (microbatches, b)
+                              + x.shape[bdim + 1:])
+                y = jnp.moveaxis(y, bdim, 0)
+                if data_axes:
+                    parts = [None] * y.ndim
+                    parts[bdim + 1] = data_axes   # batch dim after move
+                    y = jax.lax.with_sharding_constraint(y, P(*parts))
+                return y
+
+            mb = jax.tree_util.tree_map_with_path(split, model_batch)
+
+            def acc_step(carry, xs):
+                g_acc, loss_acc = carry
+                mb_i, k_i = xs
+                loss, aux, gp, _ = grads_of(params, None, mb_i, k_i)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    g_acc, gp)
+                return (g_acc, loss_acc + loss / microbatches), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            keys = jax.random.split(key, microbatches)
+            (gp, loss), _ = jax.lax.scan(acc_step, (g0, 0.0), (mb, keys))
+            aux, gz = {}, None
+
+        lr = schedule(step)
+        new_params, new_opt, om = optim.adamw_update(
+            gp, state["opt"], params, lr, opt_cfg)
+        new_state = dict(state, params=new_params, opt=new_opt,
+                         step=step + 1)
+        if use_znorm_cache:
+            new_state["znorm"] = znorm.scatter(
+                state["znorm"], batch["sample_ids"], gz)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, policy: cm.Policy):
+    def prefill_step(params, batch):
+        return registry.prefill(cfg, params, batch, policy)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, policy: cm.Policy):
+    def serve_step(params, token, pos, states):
+        logits, new_states = registry.decode_step(
+            cfg, params, token, pos, states, policy)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, new_states
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shard_map DP step with explicit (compressed) gradient all-reduce
+# ---------------------------------------------------------------------------
+
+def make_shardmap_dp_step(cfg: ArchConfig, policy: cm.Policy,
+                          opt_cfg: optim.AdamWConfig,
+                          schedule, mesh,
+                          compress: compression.Mode = "none"):
+    """Pure data-parallel step with the gradient reduction written out
+    explicitly (psum with optional bf16/int8 compression) instead of left
+    to GSPMD.  Params are replicated; used for the compression bench and
+    as the template for cross-pod DCI-frugal reductions.
+    """
+    dp = mesh_lib.data_axes(mesh)
+
+    def local_step(state, batch):
+        params = state["params"]
+        key = jax.random.wrap_key_data(state["base_key"])
+        key = jax.random.fold_in(key, state["step"])
+        # fold in the data-shard index so estimator sampling decorrelates
+        idx = jnp.zeros((), jnp.int32)
+        for a in dp:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        key = jax.random.fold_in(key, idx)
+        loss, gp = jax.value_and_grad(
+            lambda p: registry.loss_fn(cfg, p, batch, policy, key=key)[0]
+        )(params)
+        gp = compression.pmean_tree(gp, dp, compress)
+        loss = jax.lax.pmean(loss, dp)
+        lr = schedule(state["step"])
+        new_params, new_opt, om = optim.adamw_update(
+            gp, state["opt"], params, lr, opt_cfg)
+        new_state = dict(state, params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        return new_state, {"loss": loss, "lr": lr, **om}
+
+    from jax.experimental.shard_map import shard_map
+
+    state_spec = P()
+    batch_spec = P(dp)
+    return shard_map(
+        local_step, mesh=mesh,
+        in_specs=(state_spec, batch_spec),
+        out_specs=(state_spec, state_spec),
+        check_rep=False)

@@ -1,0 +1,4 @@
+"""Model substrate: 10 architecture families in pure JAX."""
+from repro.models import registry
+
+__all__ = ["registry"]

@@ -1,0 +1,389 @@
+"""State-space and recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+Mamba2 uses the chunked SSD formulation (quadratic only within a chunk,
+linear across chunks via a carried state), which is both the published
+algorithm and the TPU-friendly one: intra-chunk work is MXU einsums,
+the inter-chunk recurrence is a short scan over L/chunk steps.
+
+mLSTM/sLSTM (xLSTM, arXiv:2405.04517) use exponential gating with the
+log-space max-stabilizer m_t.  Training runs an outer scan over sequence
+chunks with the inner chunk rematerialized, so backward stores only
+chunk-boundary states.
+
+All in/out projections route through ctx.linear and are therefore
+WTA-CRS-compressible; the recurrences themselves are not weight GEMMs
+and keep exact gradients (consistent with the paper's scope, Fig. 4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    return di, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba(cfg, key, dtype):
+    d = cfg.d_model
+    di, nh, hd, n = mamba_dims(cfg)
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": cm.dense_init(ks[0], (d, 2 * di + 2 * n + nh),
+                                 ("embed", "ssm_inner"), dtype),
+        "conv_w": cm.dense_init(ks[1], (cfg.ssm_conv, conv_dim),
+                                (None, "ssm_inner"), dtype, scale=0.5),
+        "conv_b": cm.zeros_init((conv_dim,), ("ssm_inner",), dtype),
+        "a_log": cm.Boxed(jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+                          (None,)),
+        "d_skip": cm.ones_init((nh,), (None,), jnp.float32),
+        "dt_bias": cm.zeros_init((nh,), (None,), jnp.float32),
+        "norm_g": cm.ones_init((di,), ("ssm_inner",), dtype),
+        "out_proj": cm.dense_init(ks[2], (di, d), ("ssm_inner", "embed"),
+                                  dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, L, C), w: (K, C).  Returns (y, state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    return (y + b).astype(x.dtype), new_state
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, chunk: int):
+    """Chunked SSD.  xh: (B,L,H,P), dt: (B,L,H), a: (H,) negative,
+    bmat/cmat: (B,L,N).  Returns (y: (B,L,H,P), final_state (B,H,N,P))."""
+    b, l, h, p = xh.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, l)
+    nc = l // chunk
+    xc = xh.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]                    # (B,nc,c,H) <= 0
+    seg = jnp.cumsum(da, axis=2)                         # decay from chunk
+    total = seg[:, :, -1, :]                             # (B,nc,H)
+
+    # intra-chunk: Y[t] = sum_{s<=t} exp(seg_t - seg_s) (C_t.B_s) dt_s x_s
+    scores = jnp.einsum("bqtn,bqsn->bqts", cc, bc)       # (B,nc,c,c)
+    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nc,t,s,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # double-where: never exp() masked (positive) decays, else backward
+    # produces 0 * inf = NaN through the mask
+    lmat = jnp.where(causal, jnp.exp(jnp.where(causal, decay, 0.0)), 0.0)
+    y_intra = jnp.einsum("bqts,bqtsh,bqsh,bqshp->bqthp",
+                         scores, lmat, dtc, xc)
+
+    # chunk summaries: S_q = sum_s exp(total - seg_s) dt_s B_s x_s^T
+    w_end = jnp.exp(total[:, :, None, :] - seg)          # (B,nc,c,H)
+    s_q = jnp.einsum("bqsn,bqsh,bqsh,bqshp->bqhnp",
+                     bc, w_end, dtc, xc)                 # (B,nc,H,N,P)
+
+    # inter-chunk recurrence over q: h_q = exp(total_q) h_{q-1} + S_q
+    def step(hprev, xs):
+        tot_q, s_qq = xs                                 # (B,H), (B,H,N,P)
+        h_new = jnp.exp(tot_q)[..., None, None] * hprev + s_qq
+        return h_new, hprev                              # emit state BEFORE q
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    h_final, h_before = jax.lax.scan(
+        step, h0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(s_q, 1, 0)))
+    h_before = jnp.moveaxis(h_before, 0, 1)              # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bqtn,bqth,bqhnp->bqthp",
+                         cc, jnp.exp(seg), h_before)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, h_final
+
+
+def apply_mamba(cfg, p, ctx: cm.Ctx, h, chunk: int = 256,
+                return_state: bool = False):
+    """h: (B, L, D) -> (B, L, D) [, decode state]."""
+    bsz, l, d = h.shape
+    di, nh, hd, n = mamba_dims(cfg)
+    proj = ctx.linear("mamba_in", h, p["in_proj"])
+    z, xbc_raw, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc, conv_state = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    x, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = x.reshape(bsz, l, nh, hd).astype(jnp.float32)
+    y, ssm_state = _ssd_chunked(xh, dt, a, bmat.astype(jnp.float32),
+                                cmat.astype(jnp.float32), chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, l, di).astype(h.dtype)
+    y = cm.rms_norm(y, p["norm_g"], cfg.norm_eps) * jax.nn.silu(z)
+    out = ctx.linear("mamba_out", y, p["out_proj"])
+    if return_state:
+        return out, {"conv": conv_state, "ssm": ssm_state}
+    return out
+
+
+def mamba_decode_init(cfg, batch: int, dtype):
+    di, nh, hd, n = mamba_dims(cfg)
+    conv_dim = di + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, n, hd), jnp.float32),
+    }
+
+
+def mamba_decode_step(cfg, p, ctx: cm.Ctx, h1, state):
+    """h1: (B, 1, D) -> (B, 1, D); O(1) state update."""
+    bsz = h1.shape[0]
+    di, nh, hd, n = mamba_dims(cfg)
+    proj = ctx.linear("mamba_in", h1, p["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state["conv"])
+    xbc = jax.nn.silu(xbc)
+    x, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])[:, 0]   # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = x.reshape(bsz, nh, hd).astype(jnp.float32)
+    da = jnp.exp(dt * a[None, :])                               # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, bmat[:, 0].astype(jnp.float32),
+                     xh)
+    ssm = da[..., None, None] * state["ssm"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), ssm)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, di).astype(h1.dtype)
+    y = cm.rms_norm(y, p["norm_g"], cfg.norm_eps) * jax.nn.silu(z)
+    out = ctx.linear("mamba_out", y, p["out_proj"])
+    return out, {"conv": conv_state, "ssm": ssm}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, exponential gating)
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = cfg.n_heads
+    return di, nh, di // nh
+
+
+def init_mlstm(cfg, key, dtype):
+    d = cfg.d_model
+    di, nh, dh = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up": cm.dense_init(ks[0], (d, 2 * di), ("embed", "ssm_inner"),
+                            dtype),
+        "wq": cm.dense_init(ks[1], (di, di), ("ssm_inner", "ssm_inner"),
+                            dtype),
+        "wk": cm.dense_init(ks[2], (di, di), ("ssm_inner", "ssm_inner"),
+                            dtype),
+        "wv": cm.dense_init(ks[3], (di, di), ("ssm_inner", "ssm_inner"),
+                            dtype),
+        "w_if": cm.dense_init(ks[4], (di, 2 * nh), ("ssm_inner", None),
+                              dtype, scale=0.02),
+        "if_bias": cm.Boxed(
+            jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]
+                            ).astype(jnp.float32), (None,)),
+        "down": cm.dense_init(ks[5], (di, d), ("ssm_inner", "embed"), dtype),
+    }
+
+
+def _mlstm_cell_step(state, qkvif):
+    """One stabilized mLSTM step.  state: (C (B,H,dh,dh), n (B,H,dh),
+    m (B,H)).  qkvif: q,k,v (B,H,dh), i_raw,f_raw (B,H)."""
+    c, n, m = state
+    q, k, v, i_raw, f_raw = qkvif
+    dh = q.shape[-1]
+    logf = -jax.nn.softplus(-f_raw)                     # log sigmoid(f)
+    m_new = jnp.maximum(logf + m, i_raw)
+    fg = jnp.exp(logf + m - m_new)[..., None]
+    ig = jnp.exp(i_raw - m_new)[..., None]
+    k_sc = k / jnp.sqrt(dh)
+    c_new = fg[..., None] * c + (ig * v)[..., None, :] * k_sc[..., :, None]
+    n_new = fg * n + ig * k_sc
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return (c_new, n_new, m_new), h
+
+
+def _recurrent_over_chunks(cell_step, state, xs_seq, chunk: int):
+    """scan over chunks with rematerialized inner scans.
+
+    xs_seq: pytree with leading (L, ...) time axis.  Returns (state, ys)."""
+    l = jax.tree.leaves(xs_seq)[0].shape[0]
+    chunk = min(chunk, l)
+    nc = l // chunk
+    xs_c = jax.tree.map(
+        lambda x: x.reshape((nc, chunk) + x.shape[1:]), xs_seq)
+
+    @jax.checkpoint
+    def chunk_step(st, xs_chunk):
+        return jax.lax.scan(cell_step, st, xs_chunk)
+
+    state, ys = jax.lax.scan(chunk_step, state, xs_c)
+    ys = jax.tree.map(lambda y: y.reshape((l,) + y.shape[2:]), ys)
+    return state, ys
+
+
+def apply_mlstm(cfg, p, ctx: cm.Ctx, h, chunk: int = 256,
+                return_state: bool = False):
+    bsz, l, d = h.shape
+    di, nh, dh = mlstm_dims(cfg)
+    up = ctx.linear("mlstm_up", h, p["up"])
+    xs, z = jnp.split(up, 2, axis=-1)
+    q = ctx.linear("mlstm_q", xs, p["wq"]).reshape(bsz, l, nh, dh)
+    k = ctx.linear("mlstm_k", xs, p["wk"]).reshape(bsz, l, nh, dh)
+    v = ctx.linear("mlstm_v", xs, p["wv"]).reshape(bsz, l, nh, dh)
+    gif = (ctx.linear("mlstm_if", xs, p["w_if"]).astype(jnp.float32)
+           + p["if_bias"][None, None, :])
+    i_raw, f_raw = jnp.split(gif, 2, axis=-1)           # (B,L,H)
+
+    to_seq = lambda x: jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+    state = mlstm_decode_init(cfg, bsz)
+    state = (state["c"], state["n"], state["m"])
+    (cs, ns, ms), hs = _recurrent_over_chunks(
+        _mlstm_cell_step, state,
+        (to_seq(q), to_seq(k), to_seq(v), to_seq(i_raw), to_seq(f_raw)),
+        chunk)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(bsz, l, di)     # (B,L,di)
+    y = hs.astype(h.dtype) * jax.nn.silu(z)
+    out = ctx.linear("mlstm_down", y, p["down"])
+    if return_state:
+        return out, {"c": cs, "n": ns, "m": ms}
+    return out
+
+
+def mlstm_decode_init(cfg, batch: int):
+    di, nh, dh = mlstm_dims(cfg)
+    return {"c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def mlstm_decode_step(cfg, p, ctx: cm.Ctx, h1, state):
+    bsz = h1.shape[0]
+    di, nh, dh = mlstm_dims(cfg)
+    up = ctx.linear("mlstm_up", h1, p["up"])
+    xs, z = jnp.split(up, 2, axis=-1)
+    q = ctx.linear("mlstm_q", xs, p["wq"]).reshape(bsz, nh, dh)
+    k = ctx.linear("mlstm_k", xs, p["wk"]).reshape(bsz, nh, dh)
+    v = ctx.linear("mlstm_v", xs, p["wv"]).reshape(bsz, nh, dh)
+    gif = (ctx.linear("mlstm_if", xs, p["w_if"]).astype(jnp.float32)
+           + p["if_bias"][None, None, :])[:, 0]
+    i_raw, f_raw = jnp.split(gif, 2, axis=-1)
+    st = (state["c"], state["n"], state["m"])
+    (c, n, m), h_out = _mlstm_cell_step(
+        st, (q.astype(jnp.float32), k.astype(jnp.float32),
+             v.astype(jnp.float32), i_raw, f_raw))
+    y = h_out.reshape(bsz, 1, di).astype(h1.dtype) * jax.nn.silu(z)
+    out = ctx.linear("mlstm_down", y, p["down"])
+    return out, {"c": c, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, recurrent head-mixing)
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg):
+    nh = cfg.n_heads
+    return cfg.d_model, nh, cfg.d_model // nh
+
+
+def init_slstm(cfg, key, dtype):
+    d, nh, dh = slstm_dims(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": cm.dense_init(ks[0], (d, 4 * d), ("embed", "ssm_inner"),
+                              dtype),
+        # recurrent block-diagonal per-head mixing for the 4 gates
+        "r": cm.dense_init(ks[1], (nh, dh, 4 * dh), (None, None, None),
+                           dtype, scale=0.02),
+        "bias": cm.Boxed(
+            jnp.concatenate([jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)),
+                             jnp.zeros((d,))]).astype(jnp.float32), (None,)),
+        "down": cm.dense_init(ks[2], (d, d), ("ssm_inner", "embed"), dtype),
+    }
+
+
+def _slstm_cell_step_factory(p, nh, dh):
+    r = p["r"].astype(jnp.float32)
+    bias = p["bias"]
+
+    def step(state, x_t):
+        c, n, m, h_prev = state                      # (B,H,dh) x3, (B,H,dh)
+        rec = jnp.einsum("bhd,hde->bhe", h_prev, r)  # (B,H,4dh)
+        gates = (x_t.reshape((-1, nh, 4 * dh)) + rec
+                 + bias.reshape((1, nh, 4 * dh)))
+        zr, ir, fr, orr = jnp.split(gates, 4, axis=-1)
+        logf = -jax.nn.softplus(-fr)
+        m_new = jnp.maximum(logf + m, ir)
+        fg = jnp.exp(logf + m - m_new)
+        ig = jnp.exp(ir - m_new)
+        zt = jnp.tanh(zr)
+        c_new = fg * c + ig * zt
+        n_new = fg * n + ig
+        h_new = jax.nn.sigmoid(orr) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    return step
+
+
+def apply_slstm(cfg, p, ctx: cm.Ctx, h, chunk: int = 256,
+                return_state: bool = False):
+    bsz, l, d = h.shape
+    _, nh, dh = slstm_dims(cfg)
+    x = ctx.linear("slstm_in", h, p["w_in"]).astype(jnp.float32)
+    xs = jnp.moveaxis(x, 1, 0)                       # (L,B,4d)
+    state = slstm_decode_init(cfg, bsz)
+    state = (state["c"], state["n"], state["m"], state["h"])
+    step = _slstm_cell_step_factory(p, nh, dh)
+    (c, n, m, hh), hs = _recurrent_over_chunks(step, state, xs, chunk)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(bsz, l, d)
+    out = ctx.linear("slstm_down", hs.astype(h.dtype), p["down"])
+    if return_state:
+        return out, {"c": c, "n": n, "m": m, "h": hh}
+    return out
+
+
+def slstm_decode_init(cfg, batch: int):
+    _, nh, dh = slstm_dims(cfg)
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "m": z - 1e30, "h": z}
+
+
+def slstm_decode_step(cfg, p, ctx: cm.Ctx, h1, state):
+    bsz = h1.shape[0]
+    _, nh, dh = slstm_dims(cfg)
+    x = ctx.linear("slstm_in", h1, p["w_in"]).astype(jnp.float32)[:, 0]
+    step = _slstm_cell_step_factory(p, nh, dh)
+    st = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, hh), h_out = step(st, x)
+    out = ctx.linear("slstm_down",
+                     h_out.reshape(bsz, 1, cfg.d_model).astype(h1.dtype),
+                     p["down"])
+    return out, {"c": c, "n": n, "m": m, "h": hh}

@@ -1,0 +1,125 @@
+"""Optimizer + LR schedules built from scratch (no optax in this image).
+
+AdamW with decoupled weight decay (the paper fine-tunes with AdamW,
+beta=(0.9, 0.999), eps=1e-8, wd=0).  Schedules:
+
+  * ``linear_warmup_constant`` — the paper's: constant after 500 steps
+    (Appendix F), here with an optional linear decay tail.
+  * ``cosine``
+  * ``wsd`` — Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear
+    warmup, long stable plateau, short exponential-ish decay tail.
+
+Optimizer state is a pytree shaped like params (m, v), so the launcher
+shards it with the same logical-axis rules as the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array        # () int32
+    m: object               # pytree like params
+    v: object               # pytree like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: float = 0.0    # 0 = off
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, lr: jax.Array,
+                 cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm
+                            / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    count = state.count + 1
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, AdamWState(count, new_m, new_v), {"grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Schedules (step -> lr)
+# ---------------------------------------------------------------------------
+
+def linear_warmup_constant(base_lr: float, warmup: int = 500
+                           ) -> Callable[[jax.Array], jax.Array]:
+    def f(step):
+        s = step.astype(jnp.float32)
+        return base_lr * jnp.minimum(1.0, (s + 1) / warmup)
+    return f
+
+
+def cosine(base_lr: float, total_steps: int, warmup: int = 500,
+           final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / warmup)
+        t = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * warm * cos
+    return f
+
+
+def wsd(base_lr: float, total_steps: int, warmup: int = 500,
+        decay_frac: float = 0.1,
+        final_frac: float = 0.01) -> Callable[[jax.Array], jax.Array]:
+    """MiniCPM Warmup-Stable-Decay."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / warmup)
+        t = jnp.clip((s - decay_start) / max(total_steps - decay_start, 1),
+                     0.0, 1.0)
+        decay = final_frac ** t      # exponential anneal over the tail
+        return base_lr * warm * decay
+    return f
+
+
+SCHEDULES = {"constant": linear_warmup_constant, "cosine": cosine,
+             "wsd": wsd}

@@ -1,0 +1,62 @@
+"""Dataset-level gradient-norm cache (Algorithm 1's ``Cache``).
+
+The optimal column-row distribution (Eq. 3) needs ||dZ_i,:|| which is
+unknown during the forward pass.  The paper keeps a per-sample cache of
+the previous step's gradient norms.  Functionally, in JAX:
+
+  * the cache is part of the train state: {tag: (n_repeats, N_dataset)}
+    float32 arrays, one scalar per (layer-repeat, sample),
+  * before the step, columns for the batch's sample ids are gathered and
+    threaded into the forward as the ``znorms`` dict,
+  * the fresh norms come back as the *gradients of the znorms argument*
+    (the tap — see repro.core.linear), and are scattered back.
+
+Tag enumeration runs the model once under eval_shape with the tag
+recorder active, so the cache keys exactly match the WTA-CRS'd linears
+of the architecture.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.models import common as cm
+from repro.models import registry
+
+
+def collect_linear_tags(cfg) -> List[str]:
+    """All WTA-CRS-able linear tags of an architecture, in trace order."""
+    policy = cm.Policy(wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS,
+                                           budget=0.5, min_rows=1))
+    batch = registry.train_batch_specs(cfg, 2, 2 * len(cfg.pattern) * 4)
+    with cm.tag_recorder() as tags:
+        jax.eval_shape(
+            lambda p, b: registry.loss_fn(cfg, p, b, policy,
+                                          key=jax.random.PRNGKey(0))[0],
+            registry.abstract_params(cfg)[0], batch)
+    return list(tags)
+
+
+def init_cache(cfg, tags: List[str], n_dataset: int) -> Dict[str, jax.Array]:
+    """All-ones init: first step behaves like activation-only sampling."""
+    return {t: jnp.ones((cfg.n_repeats, n_dataset), jnp.float32)
+            for t in tags}
+
+
+def gather(cache: Dict[str, jax.Array], sample_ids: jax.Array
+           ) -> Dict[str, jax.Array]:
+    """-> znorms dict {tag: (n_repeats, B)} for this batch."""
+    return {t: c[:, sample_ids] for t, c in cache.items()}
+
+
+def scatter(cache: Dict[str, jax.Array], sample_ids: jax.Array,
+            tap_grads: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Write back sqrt(tap) (tap carries squared norms, summed over seq)."""
+    out = {}
+    for t, c in cache.items():
+        z = jnp.sqrt(jnp.maximum(tap_grads[t], 0.0))        # (R, B)
+        out[t] = c.at[:, sample_ids].set(z.astype(c.dtype))
+    return out

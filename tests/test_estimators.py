@@ -1,0 +1,151 @@
+"""Estimator math: unbiasedness, variance ordering, Theorem 1/2 claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (approx_matmul, column_row_probabilities,
+                        crs_plan, crs_variance, det_topk_plan,
+                        empirical_estimator_stats, exact_matmul,
+                        optimal_c_size, theorem2_condition, wtacrs_plan,
+                        wtacrs_variance_bound, apply_plan)
+from repro.core.config import EstimatorKind, WTACRSConfig
+
+
+def _concentrated_matrices(key, n=12, m=128, q=10, spike=8.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, m))
+    y = jax.random.normal(k2, (m, q))
+    x = x * (1.0 + spike * (jax.random.uniform(k3, (1, m)) > 0.85))
+    return x, y
+
+
+class TestUnbiasedness:
+    @pytest.mark.parametrize("kind", [EstimatorKind.CRS,
+                                      EstimatorKind.WTA_CRS])
+    def test_monte_carlo_mean_converges(self, kind):
+        x, y = _concentrated_matrices(jax.random.PRNGKey(0))
+        exact = exact_matmul(x, y)
+        cfg = WTACRSConfig(kind=kind, budget=0.3, min_rows=4)
+        mean, _ = empirical_estimator_stats(x, y, cfg,
+                                            jax.random.PRNGKey(1), 3000)
+        rel = float(jnp.linalg.norm(mean - exact) / jnp.linalg.norm(exact))
+        assert rel < 0.05, f"{kind}: mean off by {rel}"
+
+    def test_det_topk_is_biased(self):
+        x, y = _concentrated_matrices(jax.random.PRNGKey(2))
+        exact = exact_matmul(x, y)
+        est = approx_matmul(x, y, WTACRSConfig(kind=EstimatorKind.DET_TOPK,
+                                               budget=0.3))
+        rel = float(jnp.linalg.norm(est - exact) / jnp.linalg.norm(exact))
+        assert rel > 0.01  # drops tail mass deterministically
+
+    def test_exact_kind_is_exact(self):
+        x, y = _concentrated_matrices(jax.random.PRNGKey(3))
+        est = approx_matmul(x, y, WTACRSConfig(kind=EstimatorKind.EXACT))
+        np.testing.assert_allclose(np.asarray(est),
+                                   np.asarray(exact_matmul(x, y)),
+                                   rtol=1e-5)
+
+
+class TestVariance:
+    def test_wtacrs_beats_crs_on_concentrated_distributions(self):
+        """Theorem 2's punchline, measured."""
+        x, y = _concentrated_matrices(jax.random.PRNGKey(4))
+        k = jax.random.PRNGKey(5)
+        _, var_crs = empirical_estimator_stats(
+            x, y, WTACRSConfig(kind=EstimatorKind.CRS, budget=0.3), k, 1500)
+        _, var_wta = empirical_estimator_stats(
+            x, y, WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.3), k,
+            1500)
+        assert float(var_wta) < float(var_crs)
+
+    def test_closed_form_crs_variance_matches_monte_carlo(self):
+        x, y = _concentrated_matrices(jax.random.PRNGKey(6))
+        m = x.shape[1]
+        k = int(0.3 * m)
+        xn = jnp.linalg.norm(x, axis=0)
+        yn = jnp.linalg.norm(y, axis=1)
+        p = column_row_probabilities(xn, yn)
+        closed = float(crs_variance(x, y, p, k))
+        _, mc = empirical_estimator_stats(
+            x, y, WTACRSConfig(kind=EstimatorKind.CRS, budget=0.3),
+            jax.random.PRNGKey(7), 4000)
+        assert abs(closed - float(mc)) / closed < 0.15
+
+    def test_variance_bound_below_crs_variance_when_thm2_holds(self):
+        x, y = _concentrated_matrices(jax.random.PRNGKey(8))
+        m = x.shape[1]
+        k = int(0.3 * m)
+        p = column_row_probabilities(jnp.linalg.norm(x, axis=0),
+                                     jnp.linalg.norm(y, axis=1))
+        holds, _, _ = theorem2_condition(p, k)
+        assert bool(holds)
+        assert float(wtacrs_variance_bound(x, y, p, k)) <= \
+            float(crs_variance(x, y, p, k)) + 1e-6
+
+
+class TestPlans:
+    def test_wtacrs_plan_scales_are_consistent(self):
+        p = jnp.array([0.4, 0.3, 0.1, 0.05, 0.05, 0.04, 0.03, 0.03])
+        plan = wtacrs_plan(p, 4, jax.random.PRNGKey(0))
+        c = int(plan.c_size)
+        # deterministic slots have scale exactly 1
+        np.testing.assert_allclose(np.asarray(plan.scale[:c]), 1.0)
+        # deterministic slots are the top-c indices
+        top = np.argsort(-np.asarray(p))[:c]
+        assert set(np.asarray(plan.idx[:c]).tolist()) == set(top.tolist())
+
+    def test_optimal_c_minimizes_score(self):
+        p = jnp.sort(jax.random.dirichlet(
+            jax.random.PRNGKey(1), jnp.ones(64) * 0.1))[::-1]
+        k = 20
+        csum = jnp.cumsum(p)
+        c = int(optimal_c_size(csum, k))
+        scores = [(1 - (float(csum[i - 1]) if i else 0.0)) / (k - i)
+                  for i in range(k)]
+        assert c == int(np.argmin(scores))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 31), st.integers(0, 2 ** 30))
+    def test_plan_unbiasedness_identity_holds_exactly(self, k, seed):
+        """E[estimate] == XY computed ANALYTICALLY over the sample space:
+        det part + sum_tail (p_j/resid) * scale_j * X_j Y_j == XY, which
+        checks the |C| selection, the tail renormalization and the scale
+        formula without Monte-Carlo noise."""
+        m = 32
+        key = jax.random.PRNGKey(seed)
+        p = jax.random.dirichlet(key, jnp.ones(m))
+        x = jax.random.normal(jax.random.fold_in(key, 1), (3, m))
+        y = jax.random.normal(jax.random.fold_in(key, 2), (m, 2))
+        exact = x @ y
+
+        plan = wtacrs_plan(p, k, jax.random.fold_in(key, 3))
+        c = int(plan.c_size)
+        order = np.argsort(-np.asarray(p))
+        det_idx = order[:c]
+        tail_idx = order[c:]
+        resid = 1.0 - float(jnp.sum(p[det_idx])) if c else 1.0
+        contrib = lambda i: np.outer(np.asarray(x)[:, i],
+                                     np.asarray(y)[i, :])
+        det_part = sum((contrib(i) for i in det_idx),
+                       np.zeros((3, 2)))
+        # each stochastic slot has E = sum_tail (p_j/resid) *
+        # resid/((k-c) p_j) * X_j Y_j; (k-c) slots total
+        stoc_part = sum((contrib(i) for i in tail_idx),
+                        np.zeros((3, 2)))
+        est = det_part + stoc_part
+        np.testing.assert_allclose(est, np.asarray(exact), rtol=2e-4,
+                                   atol=2e-4)
+
+    def test_crs_plan_shapes(self):
+        p = jax.random.dirichlet(jax.random.PRNGKey(0), jnp.ones(50))
+        plan = crs_plan(p, 10, jax.random.PRNGKey(1))
+        assert plan.idx.shape == (10,)
+        assert plan.scale.shape == (10,)
+
+    def test_det_plan_picks_topk(self):
+        p = jnp.array([0.1, 0.5, 0.2, 0.15, 0.05])
+        plan = det_topk_plan(p, 2)
+        assert set(np.asarray(plan.idx).tolist()) == {1, 2}

@@ -1,0 +1,134 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.RandomState(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d", [(64, 64), (100, 96), (33, 130),
+                                 (256, 512), (8, 8)])
+def test_row_norms(n, d, dtype):
+    x = jnp.asarray(RNG.randn(n, d), dtype)
+    got = ops.row_norms(x, block_rows=32, block_d=64)
+    want = ref.row_norms_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,k", [(64, 96, 16), (50, 130, 20), (16, 8, 16),
+                                   (128, 256, 40)])
+def test_gather_scale(n, d, k, dtype):
+    x = jnp.asarray(RNG.randn(n, d), dtype)
+    idx = jnp.asarray(RNG.randint(0, n, (k,)), jnp.int32)
+    scale = jnp.asarray(RNG.rand(k), jnp.float32)
+    got = ops.gather_scale(x, idx, scale, block_d=64)
+    want = ref.gather_scale_ref(x, idx, scale)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("k,di,do,n", [(16, 32, 24, 64), (20, 130, 70, 50),
+                                       (8, 16, 16, 16), (64, 128, 96, 200)])
+def test_sampled_matmul(k, di, do, n, dtype):
+    hs = jnp.asarray(RNG.randn(k, di), dtype)
+    dz = jnp.asarray(RNG.randn(n, do), dtype)
+    idx = jnp.asarray(RNG.randint(0, n, (k,)), jnp.int32)
+    scale = jnp.asarray(RNG.rand(k), jnp.float32)
+    got = ops.sampled_matmul(hs, dz, idx, scale, bm=16, bn=16, bk=8)
+    want = ref.sampled_matmul_ref(hs, dz, idx, scale)
+    tol = dict(rtol=3e-2, atol=3e-1) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(4, 80), d=st.integers(4, 100), k=st.integers(1, 40),
+       seed=st.integers(0, 10_000))
+def test_gather_scale_property(n, d, k, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(n, d), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, n, (k,)), jnp.int32)
+    scale = jnp.asarray(rng.rand(k), jnp.float32)
+    got = ops.gather_scale(x, idx, scale, block_d=32)
+    want = ref.gather_scale_ref(x, idx, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 32), di=st.integers(4, 64), do=st.integers(4, 48),
+       n=st.integers(4, 64), seed=st.integers(0, 10_000))
+def test_sampled_matmul_property(k, di, do, n, seed):
+    rng = np.random.RandomState(seed)
+    hs = jnp.asarray(rng.randn(k, di), jnp.float32)
+    dz = jnp.asarray(rng.randn(n, do), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, n, (k,)), jnp.int32)
+    scale = jnp.asarray(rng.rand(k), jnp.float32)
+    got = ops.sampled_matmul(hs, dz, idx, scale, bm=16, bn=16, bk=8)
+    want = ref.sampled_matmul_ref(hs, dz, idx, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sampled_matmul_matches_linear_backward():
+    """Kernel computes exactly the dW the custom_vjp produces."""
+    from repro.core.config import WTACRSConfig
+    from repro.core import plans as plans_lib
+
+    rng = np.random.RandomState(3)
+    h = jnp.asarray(rng.randn(1, 64, 32), jnp.float32)
+    dz = jnp.asarray(rng.randn(64, 16), jnp.float32)
+    p = jax.random.dirichlet(jax.random.PRNGKey(0), jnp.ones(64))
+    plan = plans_lib.wtacrs_plan(p, 20, jax.random.PRNGKey(1))
+    h_sub = h[0][plan.idx]
+    got = ops.sampled_matmul(h_sub, dz, plan.idx, plan.scale,
+                             bm=16, bn=16, bk=8)
+    want = h_sub.T @ (dz[plan.idx] * plan.scale[:, None])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("group", [1, 2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(causal, group, dtype):
+    rng = np.random.RandomState(7)
+    bh, s, dh = 4, 64, 16
+    q = jnp.asarray(rng.randn(bh, s, dh), dtype)
+    k = jnp.asarray(rng.randn(bh // group, s, dh), dtype)
+    v = jnp.asarray(rng.randn(bh // group, s, dh), dtype)
+    got = ops.flash_attention_fwd(q, k, v, group=group, causal=causal,
+                                  bq=16, bk=16)
+    want = ref.flash_attention_fwd_ref(q, k, v, group=group, causal=causal)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([32, 48, 64]), dh=st.sampled_from([8, 16]),
+       seed=st.integers(0, 1000))
+def test_flash_attention_kernel_property(s, dh, seed):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(2, s, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(2, s, dh), jnp.float32)
+    v = jnp.asarray(rng.randn(2, s, dh), jnp.float32)
+    got = ops.flash_attention_fwd(q, k, v, group=1, causal=True,
+                                  bq=16, bk=16)
+    want = ref.flash_attention_fwd_ref(q, k, v, group=1, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

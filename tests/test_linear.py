@@ -1,0 +1,163 @@
+"""The WTA-CRS linear layer: gradient semantics, tap, LoRA composition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LoRAConfig, init_lora_params, lora_linear,
+                        read_grad_norm_tap, wtacrs_linear)
+from repro.core.config import EstimatorKind, WTACRSConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (4, 32, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48)) * 0.1
+    return h, w
+
+
+def test_forward_is_exact(setup):
+    """The approximation lives only in the backward pass (Sec. 3.2)."""
+    h, w = setup
+    z = wtacrs_linear(h, w, key=jax.random.PRNGKey(1),
+                      cfg=WTACRSConfig(budget=0.25, min_rows=4))
+    np.testing.assert_allclose(np.asarray(z),
+                               np.asarray(jnp.einsum("bsd,de->bse", h, w)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_dh_is_exact(setup):
+    h, w = setup
+    cfg = WTACRSConfig(budget=0.25, min_rows=4)
+
+    def f(hh):
+        return jnp.sum(jnp.sin(wtacrs_linear(
+            hh, w, key=jax.random.PRNGKey(3), cfg=cfg)))
+
+    def f_exact(hh):
+        return jnp.sum(jnp.sin(jnp.einsum("bsd,de->bse", hh, w)))
+
+    np.testing.assert_allclose(np.asarray(jax.grad(f)(h)),
+                               np.asarray(jax.grad(f_exact)(h)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_dw_unbiased(setup):
+    h, w = setup
+    cfg = WTACRSConfig(budget=0.25, min_rows=4)
+
+    def f(ww, key):
+        return jnp.sum(jnp.sin(wtacrs_linear(h, ww, key=key, cfg=cfg)))
+
+    def f_exact(ww):
+        return jnp.sum(jnp.sin(jnp.einsum("bsd,de->bse", h, ww)))
+
+    g_exact = jax.grad(f_exact)(w)
+    keys = jax.random.split(jax.random.PRNGKey(5), 2500)
+    gs = jax.vmap(lambda k: jax.grad(f)(w, k))(keys)
+    g_mean = jnp.mean(gs, axis=0)
+    rel = float(jnp.linalg.norm(g_mean - g_exact)
+                / jnp.linalg.norm(g_exact))
+    assert rel < 0.08
+
+
+def test_budget_one_equals_exact_grad(setup):
+    h, w = setup
+    cfg = WTACRSConfig(budget=1.0)
+
+    def f(ww):
+        return jnp.sum(jnp.sin(wtacrs_linear(
+            h, ww, key=jax.random.PRNGKey(0), cfg=cfg)))
+
+    def f_exact(ww):
+        return jnp.sum(jnp.sin(jnp.einsum("bsd,de->bse", h, ww)))
+
+    np.testing.assert_allclose(np.asarray(jax.grad(f)(w)),
+                               np.asarray(jax.grad(f_exact)(w)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_grad_norm_tap_returns_dz_norms(setup):
+    h, w = setup
+    cfg = WTACRSConfig(budget=0.25, min_rows=4)
+    znorm = jnp.ones(h.shape[:2])
+
+    def f(ww, zn):
+        return jnp.sum(jnp.sin(wtacrs_linear(
+            h, ww, key=jax.random.PRNGKey(7), znorm=zn, cfg=cfg)))
+
+    gz = jax.grad(f, argnums=1)(w, znorm)
+    dz = jnp.cos(jnp.einsum("bsd,de->bse", h, w))
+    np.testing.assert_allclose(np.asarray(read_grad_norm_tap(gz)),
+                               np.asarray(jnp.linalg.norm(dz, axis=-1)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cached_znorm_changes_sampling_but_stays_unbiased(setup):
+    h, w = setup
+    cfg = WTACRSConfig(budget=0.25, min_rows=4)
+    znorm = jax.random.uniform(jax.random.PRNGKey(11), h.shape[:2]) + 0.1
+
+    def f(ww, key):
+        return jnp.sum(jnp.sin(wtacrs_linear(h, ww, key=key, znorm=znorm,
+                                             cfg=cfg)))
+
+    def f_exact(ww):
+        return jnp.sum(jnp.sin(jnp.einsum("bsd,de->bse", h, ww)))
+
+    g_exact = jax.grad(f_exact)(w)
+    keys = jax.random.split(jax.random.PRNGKey(12), 2500)
+    gs = jax.vmap(lambda k: jax.grad(f)(w, k))(keys)
+    rel = float(jnp.linalg.norm(jnp.mean(gs, 0) - g_exact)
+                / jnp.linalg.norm(g_exact))
+    assert rel < 0.08
+
+
+def test_2d_input_supported():
+    h = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    z = wtacrs_linear(h, w, key=jax.random.PRNGKey(2),
+                      cfg=WTACRSConfig(budget=0.5, min_rows=4))
+    assert z.shape == (64, 8)
+
+
+def test_lora_only_adapters_receive_grads(setup):
+    h, w = setup
+    lcfg = LoRAConfig(rank=4, enabled=True)
+    lp = init_lora_params(jax.random.PRNGKey(0), 64, 48, 4)
+    # B starts at zero (adapter == identity); make it nonzero so gradient
+    # flows to A as well
+    lp["lora_b"] = jax.random.normal(jax.random.PRNGKey(2), (4, 48)) * 0.1
+
+    def f(params):
+        ww, ap = params
+        z = lora_linear(h, ww, ap["lora_a"], ap["lora_b"], lcfg,
+                        key=jax.random.PRNGKey(1),
+                        cfg=WTACRSConfig(budget=0.5, min_rows=4))
+        return jnp.sum(z * z)
+
+    gw, ga = jax.grad(f)((w, lp))
+    assert float(jnp.max(jnp.abs(gw))) == 0.0          # base frozen
+    assert float(jnp.max(jnp.abs(ga["lora_a"]))) > 0.0
+    assert float(jnp.max(jnp.abs(ga["lora_b"]))) > 0.0
+
+
+def test_lora_zero_b_init_is_identity(setup):
+    h, w = setup
+    lcfg = LoRAConfig(rank=4, enabled=True)
+    lp = init_lora_params(jax.random.PRNGKey(0), 64, 48, 4)
+    z = lora_linear(h, w, lp["lora_a"], lp["lora_b"], lcfg,
+                    key=jax.random.PRNGKey(1),
+                    cfg=WTACRSConfig(budget=1.0))
+    np.testing.assert_allclose(np.asarray(z),
+                               np.asarray(jnp.einsum("bsd,de->bse", h, w)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_estimator_requires_key():
+    h = jnp.ones((2, 16, 8))
+    w = jnp.ones((8, 4))
+    with pytest.raises(ValueError):
+        wtacrs_linear(h, w, key=None,
+                      cfg=WTACRSConfig(budget=0.25, min_rows=2))

@@ -1,0 +1,194 @@
+"""Training substrate: optimizer math, schedules, checkpoints, microbatch
+equivalence, gradient compression, the dataset znorm cache."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.models import common as cm
+from repro.models import registry
+from repro.train import checkpoint, compression, data, optim, znorm
+from repro.launch import train_steps
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAdamW:
+    def test_matches_reference_adam_step(self):
+        params = {"w": jnp.array([1.0, -2.0, 3.0])}
+        grads = {"w": jnp.array([0.1, 0.2, -0.3])}
+        st = optim.adamw_init(params)
+        cfg = optim.AdamWConfig()
+        new_p, st2, _ = optim.adamw_update(grads, st, params,
+                                           jnp.asarray(0.01), cfg)
+        # step 1: m_hat = g, v_hat = g^2 -> update = g/(|g|+eps) = sign(g)
+        np.testing.assert_allclose(
+            np.asarray(new_p["w"]),
+            np.asarray(params["w"]) - 0.01 * np.sign([0.1, 0.2, -0.3]),
+            rtol=1e-4)
+
+    def test_weight_decay_decoupled(self):
+        params = {"w": jnp.array([10.0])}
+        grads = {"w": jnp.array([0.0])}
+        st = optim.adamw_init(params)
+        cfg = optim.AdamWConfig(weight_decay=0.1)
+        new_p, _, _ = optim.adamw_update(grads, st, params,
+                                         jnp.asarray(0.01), cfg)
+        np.testing.assert_allclose(np.asarray(new_p["w"]), [10.0 - 0.01],
+                                   rtol=1e-5)
+
+    def test_grad_clipping(self):
+        params = {"w": jnp.ones((4,))}
+        grads = {"w": jnp.full((4,), 100.0)}
+        st = optim.adamw_init(params)
+        cfg = optim.AdamWConfig(grad_clip_norm=1.0)
+        _, _, m = optim.adamw_update(grads, st, params, jnp.asarray(0.0),
+                                     cfg)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+class TestSchedules:
+    def test_paper_schedule_constant_after_warmup(self):
+        f = optim.linear_warmup_constant(3e-4, warmup=500)
+        assert float(f(jnp.asarray(0))) < 3e-4
+        assert float(f(jnp.asarray(499))) == pytest.approx(3e-4)
+        assert float(f(jnp.asarray(10_000))) == pytest.approx(3e-4)
+
+    def test_wsd_shape(self):
+        f = optim.wsd(1e-3, total_steps=1000, warmup=100, decay_frac=0.2)
+        stable = float(f(jnp.asarray(500)))
+        assert stable == pytest.approx(1e-3)
+        assert float(f(jnp.asarray(999))) < 0.05 * stable
+
+    def test_cosine_endpoints(self):
+        f = optim.cosine(1e-3, 1000, warmup=10, final_frac=0.1)
+        assert float(f(jnp.asarray(999))) == pytest.approx(1e-4, rel=0.05)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_retention(self, tmp_path):
+        tree = {"a": jnp.arange(6).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+        d = str(tmp_path / "ckpt")
+        for s in (1, 2, 3, 4):
+            checkpoint.save(d, s, tree, keep=2)
+        assert checkpoint.list_steps(d) == [3, 4]
+        restored, step = checkpoint.restore(d, jax.eval_shape(lambda: tree))
+        assert step == 4
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+    def test_restore_shape_mismatch_raises(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        checkpoint.save(d, 1, {"a": jnp.ones((2,))})
+        with pytest.raises(ValueError):
+            checkpoint.restore(d, {"a": jnp.ones((3,))})
+
+    def test_async_checkpointer(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        ac = checkpoint.AsyncCheckpointer(d)
+        ac.save(7, {"x": jnp.ones((8,))})
+        ac.wait()
+        assert checkpoint.latest_step(d) == 7
+
+
+class TestMicrobatching:
+    def test_grad_accumulation_equals_full_batch_with_exact_estimator(self):
+        cfg = get_config("qwen2.5-3b", reduced=True)
+        pol = cm.Policy()   # exact
+        batch = registry.make_synthetic_batch(cfg, 4, 16, KEY)
+        state = train_steps.init_train_state(cfg, KEY)
+        s1 = train_steps.make_train_step(
+            cfg, pol, optim.AdamWConfig(), optim.linear_warmup_constant(0.0),
+            microbatches=1)
+        s2 = train_steps.make_train_step(
+            cfg, pol, optim.AdamWConfig(), optim.linear_warmup_constant(0.0),
+            microbatches=2)
+        _, m1 = jax.jit(s1)(state, batch)
+        _, m2 = jax.jit(s2)(state, batch)
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]),
+                                                  rel=1e-4)
+        assert float(m1["grad_norm"]) == pytest.approx(
+            float(m2["grad_norm"]), rel=1e-3)
+
+
+class TestCompression:
+    def test_int8_quantization_roundtrip_error_bounded(self):
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        g = {"w": jax.random.normal(KEY, (64,))}
+
+        def f(gg):
+            return compression.pmean_tree(gg, ("data",), "int8")
+
+        out = jax.jit(shard_map(f, mesh=mesh, in_specs=(P(),),
+                                out_specs=P(), check_rep=False))(g)
+        err = float(jnp.max(jnp.abs(out["w"] - g["w"])))
+        scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+        assert err <= scale * 0.51 + 1e-6
+
+    def test_bf16_mode(self):
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        g = {"w": jnp.array([1.0, 2.0, 3.0])}
+        out = jax.jit(shard_map(
+            lambda gg: compression.pmean_tree(gg, ("data",), "bf16"),
+            mesh=mesh, in_specs=(P(),), out_specs=P(),
+            check_rep=False))(g)
+        np.testing.assert_allclose(np.asarray(out["w"]), [1, 2, 3],
+                                   rtol=1e-2)
+
+
+class TestZnormCache:
+    def test_tags_enumerated_and_cache_updates(self):
+        cfg = get_config("qwen2.5-3b", reduced=True)
+        tags = znorm.collect_linear_tags(cfg)
+        assert any("attn_q" in t for t in tags)
+        assert any("mlp_wo" in t for t in tags)
+
+        n_data = 8
+        state = train_steps.init_train_state(cfg, KEY, znorm_tags=tags,
+                                             n_dataset=n_data)
+        pol = cm.Policy(wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS,
+                                            budget=0.5, min_rows=4,
+                                            ))
+        step = train_steps.make_train_step(
+            cfg, pol, optim.AdamWConfig(),
+            optim.linear_warmup_constant(1e-3), use_znorm_cache=True)
+        batch = registry.make_synthetic_batch(cfg, 4, 16, KEY)
+        batch["sample_ids"] = jnp.array([0, 3, 5, 7], jnp.int32)
+        new_state, metrics = jax.jit(step)(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        tag = tags[0]
+        before = np.asarray(state["znorm"][tag])
+        after = np.asarray(new_state["znorm"][tag])
+        touched = after[:, [0, 3, 5, 7]]
+        untouched = after[:, [1, 2, 4, 6]]
+        assert not np.allclose(touched, before[:, [0, 3, 5, 7]])
+        np.testing.assert_array_equal(untouched, before[:, [1, 2, 4, 6]])
+
+
+class TestData:
+    def test_markov_corpus_deterministic_and_shardable(self):
+        ds = data.SyntheticLM(vocab_size=64, seq_len=16, n_samples=32)
+        b1 = next(ds.epoch(4, host_id=0, n_hosts=2))
+        b2 = next(ds.epoch(4, host_id=1, n_hosts=2))
+        assert set(b1["sample_ids"]).isdisjoint(set(b2["sample_ids"]))
+        ds2 = data.SyntheticLM(vocab_size=64, seq_len=16, n_samples=32)
+        np.testing.assert_array_equal(next(ds2.epoch(4))["tokens"],
+                                      next(ds.epoch(4))["tokens"])
+
+    def test_copy_task_labels_masked(self):
+        b = data.copy_task(32, 16, 4)
+        assert (b["labels"][:, :7] == -100).all()
