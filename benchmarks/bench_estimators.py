@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_jit
 from repro.configs import get_config
 from repro.core import (column_row_probabilities, crs_variance,
-                        empirical_estimator_stats, theorem2_condition)
+                        empirical_estimator_stats, registered_estimators,
+                        theorem2_condition)
 from repro.core.config import EstimatorKind, WTACRSConfig
 from repro.models import common as cm
 from repro.models import registry
@@ -116,3 +117,17 @@ def run():
     t = time_jit(jax.jit(lambda: crs_variance(x, y, p, 76)))
     emit("crs_closed_form_variance", t,
          f"value={float(crs_variance(x, y, p, 76)):.3g}")
+
+    # registry sweep: variance of EVERY registered unbiased estimator
+    # (incl. ones added outside core, e.g. stratified_crs) vs CRS at 0.3
+    _, v_ref = empirical_estimator_stats(
+        x, y, WTACRSConfig(kind="crs", budget=0.3),
+        jax.random.PRNGKey(6), 1500)
+    for name, spec in sorted(registered_estimators().items()):
+        if spec.biased:
+            continue
+        _, v = empirical_estimator_stats(
+            x, y, WTACRSConfig(kind=name, budget=0.3),
+            jax.random.PRNGKey(6), 1500)
+        emit(f"registry_variance_vs_crs@{name}", 0.0,
+             f"var/var_crs={float(v / v_ref):.3f}")

@@ -18,8 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.core.config import EstimatorKind, NormSource, WTACRSConfig
 from repro.core.lora import LoRAConfig
+from repro.core.policy import BudgetSchedule, PolicyRules
 from repro.models import common as cm
 from repro.train import checkpoint, data, optim, znorm
 from repro.launch import train_steps
@@ -34,19 +35,30 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/wtacrs_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--budget", type=float, default=0.3)
+    ap.add_argument("--warmup-exact", type=int, default=0,
+                    help="steps to run every sampled layer exact before "
+                         "dropping to --budget (BudgetSchedule)")
     ap.add_argument("--full-size", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full_size)
+    # CACHED_GRAD: the dataset gradient-norm cache actually drives the
+    # column-row probabilities (ACTIVATION_ONLY would only warm it).
+    base = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=args.budget,
+                        min_rows=4, norm_source=NormSource.CACHED_GRAD)
+    rules = None
+    if args.warmup_exact > 0:
+        rules = PolicyRules.of(
+            ("*", base, BudgetSchedule.warmup_exact(
+                begin_step=args.warmup_exact, end=args.budget)))
     policy = cm.Policy(
-        wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS,
-                            budget=args.budget, min_rows=4),
+        wtacrs=base, rules=rules,
         lora=LoRAConfig(rank=16, enabled=False),  # LoRA params are module-
         # level in this framework; flip enabled=True for adapter training
     )
 
     n_data = 512
-    tags = znorm.collect_linear_tags(cfg)
+    tags = znorm.collect_linear_tags(cfg, policy=policy)
     print(f"{len(tags)} WTA-CRS'd linears; dataset cache over {n_data} "
           f"samples")
     ds = data.SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
@@ -60,11 +72,14 @@ def main():
                                           jax.eval_shape(lambda: state))
         print(f"resumed from step {start}")
 
-    step = jax.jit(train_steps.make_train_step(
+    # scheduled step: re-resolves budget schedules at the live step
+    # counter (one compile per schedule plateau; exactly one when the
+    # policy is schedule-free)
+    step = train_steps.make_scheduled_train_step(
         cfg, policy, optim.AdamWConfig(weight_decay=0.0,
                                        grad_clip_norm=1.0),
         optim.wsd(3e-3, total_steps=args.steps, warmup=10),
-        use_znorm_cache=True))
+        use_znorm_cache=True)
     ckpt = checkpoint.AsyncCheckpointer(args.ckpt_dir, keep=3)
 
     it = ds.epoch(args.batch)

@@ -4,7 +4,10 @@
 
 Demonstrates the three-line integration: pick a policy, build a train
 step, feed batches.  The estimator swaps in at the linear-layer level —
-no model-code changes.
+no model-code changes.  ``--per-layer`` upgrades the single global
+config to a PolicyRules policy: attention output projections stay exact
+while the MLP block samples at half the headline budget — the
+per-tag-glob API that replaced the one-knob WTACRSConfig.
 """
 import argparse
 
@@ -13,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.core.policy import PolicyRules
 from repro.models import common as cm
 from repro.train import data, optim
 from repro.launch import train_steps
@@ -23,20 +27,32 @@ def main():
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--budget", type=float, default=0.3)
+    ap.add_argument("--per-layer", action="store_true",
+                    help="exact attn_o + aggressive MLP via PolicyRules")
+    ap.add_argument("--schedule", default="constant",
+                    choices=sorted(optim.SCHEDULES))
     ap.add_argument("--full-size", action="store_true",
                     help="use the published config instead of the reduced")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full_size)
-    policy = cm.Policy(wtacrs=WTACRSConfig(
-        kind=EstimatorKind.WTA_CRS, budget=args.budget, min_rows=4))
+    base = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=args.budget,
+                        min_rows=4)
+    rules = None
+    if args.per_layer:
+        rules = PolicyRules.of(
+            ("*attn_o", {"kind": EstimatorKind.EXACT}),
+            ("*mlp_*", {"budget": args.budget / 2}),
+        )
+    policy = cm.Policy(wtacrs=base, rules=rules)
 
     ds = data.SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32,
                           n_samples=128, seed=0, branching=2)
     state = train_steps.init_train_state(cfg, jax.random.PRNGKey(0))
     step = jax.jit(train_steps.make_train_step(
         cfg, policy, optim.AdamWConfig(),
-        optim.linear_warmup_constant(3e-3, warmup=5)))
+        optim.make_schedule(args.schedule, 3e-3, total_steps=args.steps,
+                            warmup=5)))
 
     it = ds.epoch(8)
     for s in range(args.steps):

@@ -1,23 +1,38 @@
-"""Core WTA-CRS library: estimators, sampling plans, approximated linears."""
+"""Core WTA-CRS library: estimators, sampling plans, approximated linears.
+
+Estimator dispatch is open: plan builders register by name in
+``estimator_registry`` (built-ins in ``plans``, extras in
+``estimators_extra``) and per-layer selection/scheduling lives in
+``policy``.
+"""
 from repro.core.config import (EstimatorKind, NormSource, WTACRSConfig,
                                EXACT_CONFIG)
+from repro.core.estimator_registry import (EstimatorSpec, get_estimator,
+                                           register_estimator,
+                                           registered_estimators)
 from repro.core.plans import (SamplePlan, column_row_probabilities, crs_plan,
                               det_topk_plan, wtacrs_plan, build_plan,
                               optimal_c_size)
+from repro.core import estimators_extra as _estimators_extra  # noqa: F401
 from repro.core.estimators import (approx_matmul, apply_plan, exact_matmul,
                                    crs_variance, wtacrs_variance_bound,
                                    theorem2_condition,
                                    empirical_estimator_stats)
-from repro.core.linear import wtacrs_linear, read_grad_norm_tap
+from repro.core.linear import (wtacrs_linear, wtacrs_linear_shared,
+                               read_grad_norm_tap)
 from repro.core.lora import LoRAConfig, init_lora_params, lora_linear
+from repro.core.policy import BudgetSchedule, PolicyRules, Rule
 
 __all__ = [
     "EstimatorKind", "NormSource", "WTACRSConfig", "EXACT_CONFIG",
+    "EstimatorSpec", "get_estimator", "register_estimator",
+    "registered_estimators",
     "SamplePlan", "column_row_probabilities", "crs_plan", "det_topk_plan",
     "wtacrs_plan", "build_plan", "optimal_c_size",
     "approx_matmul", "apply_plan", "exact_matmul", "crs_variance",
     "wtacrs_variance_bound", "theorem2_condition",
     "empirical_estimator_stats",
-    "wtacrs_linear", "read_grad_norm_tap",
+    "wtacrs_linear", "wtacrs_linear_shared", "read_grad_norm_tap",
     "LoRAConfig", "init_lora_params", "lora_linear",
+    "BudgetSchedule", "PolicyRules", "Rule",
 ]

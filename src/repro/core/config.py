@@ -5,16 +5,25 @@ estimator for GEMM with reduced variance, used to sub-sample the activation
 matrix stored for the weight-gradient GEMM (Eq. 1c).  This module holds the
 configuration shared by the plan builders, the custom-vjp linear layer and
 the model integration layer.
+
+``kind`` accepts either an :class:`EstimatorKind` member or any plain
+string registered in :mod:`repro.core.estimator_registry`, so downstream
+code can ship new estimators without editing this enum.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+from typing import Union
 
 
 class EstimatorKind(str, enum.Enum):
-    """Which estimator is used for the backward weight-gradient GEMM."""
+    """Built-in estimators for the backward weight-gradient GEMM.
+
+    Not exhaustive: ``WTACRSConfig.kind`` may name any estimator
+    registered via ``repro.core.estimator_registry.register_estimator``
+    (e.g. the stratified CRS variant in ``repro.core.estimators_extra``).
+    """
 
     EXACT = "exact"          # no approximation (full fine-tuning baseline)
     CRS = "crs"              # iid column-row sampling, Drineas et al. (Eq. 5)
@@ -31,6 +40,11 @@ class NormSource(str, enum.Enum):
     optimizer step (Algorithm 1).  ``ACTIVATION_ONLY`` uses p_i ∝ ||H_i,:||
     which requires no cache and is also unbiased (any distribution with
     full support is unbiased; Eq. 3 is only optimal for variance).
+
+    This field is authoritative: with ``ACTIVATION_ONLY`` a supplied
+    ``znorm`` is ignored for the sampling probabilities (the gradient-norm
+    tap still flows back through the znorm argument, so a cache can warm
+    up before a schedule or rule switches the layer to ``CACHED_GRAD``).
     """
 
     ACTIVATION_ONLY = "activation_only"
@@ -42,7 +56,8 @@ class WTACRSConfig:
     """Static configuration for approximated linear layers.
 
     Attributes:
-      kind: which estimator to use in the backward pass.
+      kind: which estimator to use in the backward pass — an
+        ``EstimatorKind`` or the name of any registered estimator.
       budget: normalized column-row pair budget k/|D| in (0, 1].  The paper
         evaluates 0.3 and 0.1.
       norm_source: see NormSource.
@@ -54,23 +69,41 @@ class WTACRSConfig:
         (TPU target; interpret-mode on CPU) instead of plain jnp.
     """
 
-    kind: EstimatorKind = EstimatorKind.WTA_CRS
+    kind: Union[EstimatorKind, str] = EstimatorKind.WTA_CRS
     budget: float = 0.3
-    norm_source: NormSource = NormSource.ACTIVATION_ONLY
+    norm_source: Union[NormSource, str] = NormSource.ACTIVATION_ONLY
     min_rows: int = 8
     deterministic_fraction_cap: float = 1.0
     use_kernel: bool = False
 
+    def __post_init__(self):
+        # kind is open (any registered name; validated at dispatch), but
+        # norm_source is a closed set — reject typos here instead of
+        # letting them silently disable the gradient-norm cache.
+        object.__setattr__(self, "norm_source", NormSource(self.norm_source))
+
+    @property
+    def kind_name(self) -> str:
+        """The estimator name as a plain string (registry key)."""
+        return str(getattr(self.kind, "value", self.kind))
+
+    @property
+    def is_exact(self) -> bool:
+        return self.kind_name == EstimatorKind.EXACT.value
+
     def budget_rows(self, n_rows: int) -> int:
         """Concrete k for a contraction dimension of size ``n_rows``."""
-        if self.kind == EstimatorKind.EXACT:
+        if self.is_exact:
             return n_rows
         k = int(round(self.budget * n_rows))
         k = max(self.min_rows, k)
         return min(k, n_rows)
 
-    def with_kind(self, kind: EstimatorKind) -> "WTACRSConfig":
+    def with_kind(self, kind: Union[EstimatorKind, str]) -> "WTACRSConfig":
         return dataclasses.replace(self, kind=kind)
+
+    def with_budget(self, budget: float) -> "WTACRSConfig":
+        return dataclasses.replace(self, budget=budget)
 
 
 EXACT_CONFIG = WTACRSConfig(kind=EstimatorKind.EXACT, budget=1.0)

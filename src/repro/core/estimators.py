@@ -11,8 +11,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import estimator_registry as registry
 from repro.core import plans as plans_lib
-from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.core.config import WTACRSConfig
 
 
 def exact_matmul(x: jax.Array, y: jax.Array) -> jax.Array:
@@ -29,16 +30,17 @@ def apply_plan(x: jax.Array, y: jax.Array,
 
 def approx_matmul(x: jax.Array, y: jax.Array, cfg: WTACRSConfig,
                   key: Optional[jax.Array] = None) -> jax.Array:
-    """Estimate X @ Y with cfg.kind using the optimal distribution (Eq. 3)."""
-    if cfg.kind == EstimatorKind.EXACT:
+    """Estimate X @ Y with cfg.kind using the optimal distribution (Eq. 3).
+
+    ``cfg.kind`` may be any name in the estimator registry."""
+    if registry.is_exact(cfg.kind):
         return exact_matmul(x, y)
     m = x.shape[1]
     k = cfg.budget_rows(m)
     x_norms = jnp.linalg.norm(x.astype(jnp.float32), axis=0)
     y_norms = jnp.linalg.norm(y.astype(jnp.float32), axis=1)
     p = plans_lib.column_row_probabilities(x_norms, y_norms)
-    plan = plans_lib.build_plan(cfg.kind, p, k, key,
-                                cfg.deterministic_fraction_cap)
+    plan = plans_lib.build_plan(cfg.kind, p, k, key, cfg=cfg)
     return apply_plan(x, y, plan)
 
 

@@ -1,0 +1,47 @@
+"""Estimators beyond the paper, registered through the estimator registry.
+
+This module is deliberately OUTSIDE the core dispatch path
+(``plans.build_plan`` / ``linear._make_plans`` never mention these
+names): it exists to prove that a new estimator plugs in purely via
+``@register_estimator`` and is then reachable from ``WTACRSConfig(kind=
+"stratified_crs")`` or a per-layer ``PolicyRules`` rule.
+
+``stratified_crs`` — stratified (systematic) column-row sampling.  The
+unit interval is split into k equal strata and one uniform draw is taken
+per stratum; indices come from inverting the CDF of p.  With the CRS
+scale 1/(k p_i) the estimator is unbiased: the expected number of copies
+of atom i is exactly k p_i, so
+
+    E[sum_t X_{i_t} Y_{i_t} / (k p_{i_t})] = sum_i (k p_i)/(k p_i) X_i Y_i
+                                           = XY.
+
+Variance is never worse than iid CRS under the same p (stratification is
+a variance-reduction technique; atoms with p_i >= 1/k are hit at least
+floor(k p_i) times deterministically, which recovers much of WTA-CRS's
+winner-take-all behaviour without the explicit |C| search).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimator_registry import register_estimator
+from repro.core.plans import SamplePlan
+
+_EPS = 1e-30
+
+
+@register_estimator("stratified_crs", needs_key=True, biased=False)
+def stratified_crs_plan(p: jax.Array, k: int, key: jax.Array,
+                        cfg=None) -> SamplePlan:
+    """One CDF-inverted draw per stratum [t/k, (t+1)/k); CRS scaling."""
+    m = p.shape[0]
+    u = jax.random.uniform(key, (k,), dtype=p.dtype)
+    points = (jnp.arange(k, dtype=p.dtype) + u) / k            # (k,) in (0,1)
+    cdf = jnp.cumsum(p)
+    idx = jnp.clip(jnp.searchsorted(cdf, points, side="left"),
+                   0, m - 1).astype(jnp.int32)
+    scale = 1.0 / (k * jnp.maximum(p[idx], _EPS))
+    zero = jnp.zeros((), dtype=p.dtype)
+    return SamplePlan(idx, scale.astype(p.dtype),
+                      jnp.zeros((), jnp.int32), zero)

@@ -25,24 +25,32 @@ faithful SPMD expression of it.
 The column-row distribution (Eq. 3) is p_i ∝ ||H_i,:|| * ||dZ_i,:||.  dZ
 is unknown at forward time, so the caller may supply ``znorm`` — cached
 per-token gradient-norm estimates from the previous step (Algorithm 1's
-Cache).  The fresh norms are delivered back through the *gradient-norm
-tap*: the cotangent returned for ``znorm`` is the SQUARED per-token norm
-of dZ rather than a true derivative (sampling probabilities are treated
-as non-differentiable, exactly as in the paper).  Training code reads
-grads-of-znorm to refresh the cache (repro.train.znorm).
+Cache).  The cached term enters the probabilities only when
+``cfg.norm_source == NormSource.CACHED_GRAD``; with ``ACTIVATION_ONLY``
+the supplied znorm is ignored for sampling (p_i ∝ ||H_i,:||) but the
+*gradient-norm tap* still flows: the cotangent returned for ``znorm`` is
+the SQUARED per-token norm of dZ rather than a true derivative (sampling
+probabilities are treated as non-differentiable, exactly as in the
+paper).  Training code reads grads-of-znorm to refresh the cache
+(repro.train.znorm) — including during an activation-only warmup.
+
+Estimator dispatch is by name through ``repro.core.estimator_registry``:
+``cfg.kind`` may be any registered estimator, and all public entry
+points (``wtacrs_linear``, ``wtacrs_linear_shared``, ``lora_linear``)
+are thin wrappers over one internal ``_dispatch_sampled_dense`` path.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core import plans as plans_lib
-from repro.core.config import EstimatorKind, NormSource, WTACRSConfig
+from repro.core import estimator_registry as registry
+from repro.core.config import NormSource, WTACRSConfig
 
 _EPS = 1e-30
 
@@ -65,25 +73,29 @@ def _sampled_linear(h: jax.Array, w: jax.Array, key_data: jax.Array,
 
 
 def _make_plans(h, znorm, key_data, cfg: WTACRSConfig, k: int):
-    """Per-sample plans.  h: (B,S,D), znorm: (B,S) -> idx/scale (B,k)."""
+    """Per-sample plans.  h: (B,S,D), znorm: (B,S) -> idx/scale (B,k).
+
+    Dispatches to the registered plan builder for ``cfg.kind``.  The
+    znorm term enters the probabilities only under CACHED_GRAD (the
+    config is authoritative; see NormSource).
+    """
     b = h.shape[0]
     h_norms = _row_norms(h)                                   # (B, S)
-    weights = h_norms * znorm.astype(jnp.float32)
+    if cfg.norm_source == NormSource.CACHED_GRAD:
+        weights = h_norms * znorm.astype(jnp.float32)
+    else:
+        weights = h_norms
     totals = jnp.sum(weights, axis=-1, keepdims=True)
     uniform = jnp.full_like(weights, 1.0 / weights.shape[-1])
     p = jnp.where(totals > 0, weights / jnp.maximum(totals, _EPS), uniform)
 
-    if cfg.kind == EstimatorKind.DET_TOPK:
-        plan = jax.vmap(lambda pr: plans_lib.det_topk_plan(pr, k))(p)
-        return plan.idx, plan.scale
-    key = jax.random.wrap_key_data(key_data)
-    keys = jax.random.split(key, b)
-    if cfg.kind == EstimatorKind.CRS:
-        plan = jax.vmap(lambda pr, kk: plans_lib.crs_plan(pr, k, kk))(
-            p, keys)
+    spec = registry.get_estimator(cfg.kind)
+    if spec.needs_key:
+        key = jax.random.wrap_key_data(key_data)
+        keys = jax.random.split(key, b)
+        plan = jax.vmap(lambda pr, kk: spec.build(pr, k, kk, cfg))(p, keys)
     else:
-        plan = jax.vmap(lambda pr, kk: plans_lib.wtacrs_plan(
-            pr, k, kk, cfg.deterministic_fraction_cap))(p, keys)
+        plan = jax.vmap(lambda pr: spec.build(pr, k, None, cfg))(p)
     return plan.idx, plan.scale
 
 
@@ -91,6 +103,28 @@ def _rowgather(x: jax.Array, idx: jax.Array) -> jax.Array:
     """(B, S, D)[B, k] -> (B, k, D) without broadcasting an index tensor
     to the output shape (take_along_axis materializes u32[B,k,D])."""
     return jax.vmap(lambda xb, ib: jnp.take(xb, ib, axis=0))(x, idx)
+
+
+def _sampled_dw(h_sub, dz, idx, scale, cfg: WTACRSConfig, out_dtype):
+    """dW = H'^T @ (dZ[idx] * scale) — Pallas kernel when enabled and the
+    plan is single-sample (B == 1), else a batched dot_general."""
+    if cfg.use_kernel and h_sub.shape[0] == 1:
+        from repro.kernels import ops as kernel_ops
+        dw = kernel_ops.sampled_matmul(h_sub[0], dz[0], idx[0], scale[0])
+    else:
+        dz_sub = _rowgather(dz, idx)                           # (B, k, E)
+        dz_sub = dz_sub * scale[:, :, None].astype(dz_sub.dtype)
+        dw = jax.lax.dot_general(
+            h_sub, dz_sub, (((0, 1), (0, 1)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return dw.astype(out_dtype)
+
+
+def _sq_norm_tap(dz):
+    # Gradient-norm tap: NOT a derivative (see module doc).  Squared norms
+    # so per-sample caches broadcast over positions sum correctly.
+    return jnp.einsum("bse,bse->bs", dz, dz,
+                      preferred_element_type=jnp.float32)      # (B, S)
 
 
 def _sampled_linear_fwd(h, w, key_data, znorm, cfg: WTACRSConfig):
@@ -108,20 +142,8 @@ def _sampled_linear_fwd(h, w, key_data, znorm, cfg: WTACRSConfig):
 def _sampled_linear_bwd(cfg: WTACRSConfig, residuals, dz):
     h_sub, idx, scale, w, key_shape = residuals
     dh = jnp.einsum("bse,de->bsd", dz, w)
-    dz_sub = _rowgather(dz, idx)                               # (B, k, E)
-    dz_sub = dz_sub * scale[:, :, None].astype(dz_sub.dtype)
-    if cfg.use_kernel and h_sub.shape[0] == 1:
-        from repro.kernels import ops as kernel_ops
-        dw = kernel_ops.sampled_matmul(h_sub[0], dz[0], idx[0], scale[0])
-    else:
-        dw = jax.lax.dot_general(
-            h_sub, dz_sub, (((0, 1), (0, 1)), ((), ())),
-            preferred_element_type=jnp.float32)
-    dw = dw.astype(w.dtype)
-    # Gradient-norm tap: NOT a derivative (see module doc).  Squared norms
-    # so per-sample caches broadcast over positions sum correctly.
-    tap = jnp.einsum("bse,bse->bs", dz, dz,
-                     preferred_element_type=jnp.float32)       # (B, S)
+    dw = _sampled_dw(h_sub, dz, idx, scale, cfg, w.dtype)
+    tap = _sq_norm_tap(dz)
     dkey = np.zeros(key_shape, dtype=jax.dtypes.float0)
     return dh.astype(h_sub.dtype), dw, dkey, tap
 
@@ -162,14 +184,8 @@ def _sampled_linear_shared_bwd(cfg: WTACRSConfig, residuals, dzs):
     dws = []
     tap = None
     for dz in dzs:
-        dz_sub = _rowgather(dz, idx)
-        dz_sub = dz_sub * scale[:, :, None].astype(dz_sub.dtype)
-        dw = jax.lax.dot_general(
-            h_sub, dz_sub, (((0, 1), (0, 1)), ((), ())),
-            preferred_element_type=jnp.float32)
-        dws.append(dw.astype(ws[0].dtype))
-        t = jnp.einsum("bse,bse->bs", dz, dz,
-                       preferred_element_type=jnp.float32)
+        dws.append(_sampled_dw(h_sub, dz, idx, scale, cfg, ws[0].dtype))
+        t = _sq_norm_tap(dz)
         tap = t if tap is None else tap + t
     dkey = np.zeros(key_shape, dtype=jax.dtypes.float0)
     return dh.astype(h_sub.dtype), tuple(dws), dkey, tap
@@ -179,79 +195,92 @@ _sampled_linear_shared.defvjp(_sampled_linear_shared_fwd,
                               _sampled_linear_shared_bwd)
 
 
-def wtacrs_linear_shared(h: jax.Array, ws, key=None, znorm=None,
-                         cfg: WTACRSConfig = WTACRSConfig(),
-                         biases=None):
-    """Shared-plan multi-linear: returns one output per weight in ``ws``.
+# ---------------------------------------------------------------------------
+# Unified internal dispatch + thin public wrappers
+# ---------------------------------------------------------------------------
 
-    h: (..., S, d_in); every w: (d_in, d_out_i)."""
+def _dispatch_sampled_dense(h: jax.Array, ws: Sequence[jax.Array],
+                            key: Optional[jax.Array],
+                            znorm: Optional[jax.Array],
+                            cfg: WTACRSConfig,
+                            biases: Optional[Sequence] = None,
+                            shared: bool = False) -> Tuple[jax.Array, ...]:
+    """The single sampled-dense path every public wrapper routes through.
+
+    Handles: leading-dim reshape to (B, S, D), the exact short-circuit
+    (EXACT kind or budget covering all rows), znorm normalization, key
+    requirements from the registered estimator's signature, and the
+    shared-plan vs per-weight choice.  Returns one output per weight.
+    """
     lead = h.shape[:-1]
     squeeze = h.ndim == 2
     h3 = h[None] if squeeze else h.reshape((-1,) + h.shape[-2:])
     b, s = h3.shape[0], h3.shape[1]
 
-    if cfg.kind == EstimatorKind.EXACT or cfg.budget_rows(s) >= s:
+    if cfg.is_exact or cfg.budget_rows(s) >= s:
         zs = tuple(jnp.einsum("...sd,de->...se", h, w) for w in ws)
     else:
+        spec = registry.get_estimator(cfg.kind)
+        if key is None:
+            if spec.needs_key:
+                raise ValueError(
+                    f"estimator {cfg.kind_name!r} requires a PRNG key")
+            key = jax.random.PRNGKey(0)     # keyless builder: value unused
         zn = (jnp.ones((b, s), jnp.float32) if znorm is None
               else znorm.reshape((b, s)).astype(jnp.float32))
-        if key is None:
-            raise ValueError("shared-plan estimator requires a PRNG key")
-        z3s = _sampled_linear_shared(h3, tuple(ws),
-                                     jax.random.key_data(key), zn, cfg)
+        key_data = jax.random.key_data(key)
+        if shared and len(ws) > 1:
+            if not spec.supports_shared:
+                raise ValueError(f"estimator {cfg.kind_name!r} does not "
+                                 f"support shared plans")
+            z3s = _sampled_linear_shared(h3, tuple(ws), key_data, zn, cfg)
+        else:
+            z3s = tuple(_sampled_linear(h3, w, key_data, zn, cfg)
+                        for w in ws)
         zs = tuple(z[0] if squeeze else z.reshape(lead + (z.shape[-1],))
                    for z in z3s)
+
     if biases is not None:
         zs = tuple(z if bias is None else z + bias
                    for z, bias in zip(zs, biases))
     return zs
 
 
-# ---------------------------------------------------------------------------
-# Public entry points
-# ---------------------------------------------------------------------------
-
 def wtacrs_linear(h: jax.Array, w: jax.Array,
                   key: Optional[jax.Array] = None,
                   znorm: Optional[jax.Array] = None,
                   cfg: WTACRSConfig = WTACRSConfig(),
                   bias: Optional[jax.Array] = None) -> jax.Array:
-    """Linear layer with WTA-CRS-approximated weight gradient.
+    """Linear layer with estimator-approximated weight gradient.
 
     Args:
       h: activations (..., S, d_in); sampling happens over S per leading
         index.  2-D inputs (n, d_in) are treated as one sample of n rows.
       w: weight (d_in, d_out).
-      key: PRNG key for the sampling plans (not needed for EXACT/DET_TOPK).
+      key: PRNG key for the sampling plans (not needed for estimators
+        whose registry entry declares ``needs_key=False``, e.g.
+        EXACT/DET_TOPK).
       znorm: gradient-norm estimates, shape h.shape[:-1] (or broadcastable
-        per-sample values); None -> activation-only probabilities.
-      cfg: estimator configuration.
+        per-sample values); consulted for sampling only under
+        ``NormSource.CACHED_GRAD``, but the gradient-norm tap always
+        flows back through this argument.
+      cfg: estimator configuration (``cfg.kind`` may be any registered
+        estimator name).
       bias: optional (d_out,), added exactly.
     """
-    lead = h.shape[:-1]
-    d_in = h.shape[-1]
-    squeeze = h.ndim == 2
-    h3 = h[None] if squeeze else h.reshape((-1,) + h.shape[-2:])
-    b, s = h3.shape[0], h3.shape[1]
+    return _dispatch_sampled_dense(h, (w,), key, znorm, cfg,
+                                   biases=(bias,))[0]
 
-    if cfg.kind == EstimatorKind.EXACT or cfg.budget_rows(s) >= s:
-        z = jnp.einsum("...sd,de->...se", h, w)
-    else:
-        if znorm is None:
-            zn = jnp.ones((b, s), jnp.float32)
-        else:
-            zn = znorm.reshape((b, s)).astype(jnp.float32)
-        if key is None:
-            if cfg.kind != EstimatorKind.DET_TOPK:
-                raise ValueError(f"estimator {cfg.kind} requires a PRNG key")
-            key = jax.random.PRNGKey(0)
-        key_data = jax.random.key_data(key)
-        z3 = _sampled_linear(h3, w, key_data, zn, cfg)
-        z = z3[0] if squeeze else z3.reshape(lead + (w.shape[-1],))
 
-    if bias is not None:
-        z = z + bias
-    return z
+def wtacrs_linear_shared(h: jax.Array, ws, key=None, znorm=None,
+                         cfg: WTACRSConfig = WTACRSConfig(),
+                         biases=None):
+    """Shared-plan multi-linear: returns one output per weight in ``ws``.
+
+    h: (..., S, d_in); every w: (d_in, d_out_i).  One plan and ONE stored
+    H' serve all weights (see the shared-plan notes above)."""
+    return _dispatch_sampled_dense(h, tuple(ws), key, znorm, cfg,
+                                   biases=biases, shared=True)
 
 
 def read_grad_norm_tap(grads_znorm: jax.Array) -> jax.Array:

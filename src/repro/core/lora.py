@@ -7,10 +7,14 @@ that: a LoRA-augmented linear computes
     z = h @ W  +  (alpha / r) * (h @ A) @ B
 
 with W frozen (no gradient) and only A (d_in, r), B (r, d_out) trainable.
-The frozen path's weight gradient is skipped entirely via stop_gradient on
-W; the LoRA path's GEMMs are small (rank r), so their activations are
-cheap, but `h @ A`'s backward still needs H — so the LoRA down-projection
-is also WTA-CRS'd when enabled.
+
+The frozen base path runs as a plain einsum on a stop_gradient'ed W: no
+dW is ever formed, so its backward needs only W itself (for dH) and no
+activation residual at all — routing it through the sampled path would
+store a k-row H' for a weight gradient that is discarded.  The LoRA
+down-projection ``h @ A`` is the only GEMM here whose backward needs H,
+so it alone goes through the sampled dispatch; its gradient-norm tap is
+what a znorm cache sees for this layer.
 """
 from __future__ import annotations
 
@@ -49,15 +53,11 @@ def lora_linear(h: jax.Array, w: jax.Array, lora_a: jax.Array,
                 znorm: Optional[jax.Array] = None,
                 cfg: WTACRSConfig = WTACRSConfig(),
                 bias: Optional[jax.Array] = None) -> jax.Array:
-    """Frozen base linear + trainable low-rank update, both memory-efficient.
-
-    The base weight is stop_gradient'ed: its dW is never formed, and because
-    the WTA-CRS path only stores H' for dW, the frozen base path stores
-    nothing beyond what dH needs (just W itself).
-    """
+    """Frozen base linear + trainable low-rank update, both memory-efficient."""
     w_frozen = jax.lax.stop_gradient(w)
-    z = wtacrs_linear(h, w_frozen, key=key, znorm=znorm, cfg=cfg, bias=bias)
+    z = jnp.einsum("...sd,de->...se", h, w_frozen)
+    if bias is not None:
+        z = z + bias
     key_a = None if key is None else jax.random.fold_in(key, 1)
     down = wtacrs_linear(h, lora_a, key=key_a, znorm=znorm, cfg=cfg)
-    z = z + jnp.dot(down, lora_b) * lora_cfg.scaling
-    return z
+    return z + jnp.dot(down, lora_b) * lora_cfg.scaling

@@ -21,6 +21,11 @@ Three plan builders are provided:
 
 Everything is shape-static and jit-safe: |C| is a traced integer, realised
 via masks over a fixed k slots.
+
+Each builder registers itself in ``repro.core.estimator_registry``;
+``build_plan`` (and every other dispatch site) resolves by name through
+the registry, so new plan builders can be added from any module without
+editing this file.
 """
 from __future__ import annotations
 
@@ -28,6 +33,8 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import estimator_registry as registry
 
 _EPS = 1e-30
 
@@ -128,16 +135,43 @@ def wtacrs_plan(p: jax.Array, k: int, key: jax.Array,
                       c_star, det_mass.astype(p.dtype))
 
 
-def build_plan(kind, p: jax.Array, k: int, key: Optional[jax.Array],
-               deterministic_fraction_cap: float = 1.0) -> SamplePlan:
-    """Dispatch on EstimatorKind (string-compatible)."""
-    from repro.core.config import EstimatorKind
+# ---------------------------------------------------------------------------
+# Registry entries + dispatch
+# ---------------------------------------------------------------------------
 
-    kind = EstimatorKind(kind)
-    if kind == EstimatorKind.CRS:
-        return crs_plan(p, k, key)
-    if kind == EstimatorKind.DET_TOPK:
-        return det_topk_plan(p, k)
-    if kind == EstimatorKind.WTA_CRS:
-        return wtacrs_plan(p, k, key, deterministic_fraction_cap)
-    raise ValueError(f"no sampling plan for estimator kind {kind}")
+@registry.register_estimator("crs", needs_key=True, biased=False)
+def _crs_builder(p, k, key, cfg=None) -> SamplePlan:
+    return crs_plan(p, k, key)
+
+
+@registry.register_estimator("det_topk", needs_key=False, biased=True)
+def _det_topk_builder(p, k, key, cfg=None) -> SamplePlan:
+    return det_topk_plan(p, k)
+
+
+@registry.register_estimator("wta_crs", needs_key=True, biased=False)
+def _wtacrs_builder(p, k, key, cfg=None) -> SamplePlan:
+    cap = 1.0 if cfg is None else cfg.deterministic_fraction_cap
+    return wtacrs_plan(p, k, key, cap)
+
+
+def build_plan(kind, p: jax.Array, k: int, key: Optional[jax.Array],
+               deterministic_fraction_cap: float = 1.0,
+               cfg=None) -> SamplePlan:
+    """Dispatch by estimator name through the registry.
+
+    ``kind`` is an EstimatorKind or any registered name; ``cfg`` (optional)
+    is forwarded to the builder so custom estimators can read their knobs.
+    When ``cfg`` is omitted a minimal one carrying
+    ``deterministic_fraction_cap`` is synthesized for backward
+    compatibility with the original signature.
+    """
+    if registry.is_exact(kind):
+        raise ValueError(f"no sampling plan for estimator kind {kind}")
+    spec = registry.get_estimator(kind)
+    if cfg is None:
+        from repro.core.config import WTACRSConfig
+        cfg = WTACRSConfig(kind=registry.kind_name(kind),
+                           deterministic_fraction_cap=
+                           deterministic_fraction_cap)
+    return spec.build(p, k, key if spec.needs_key else None, cfg)

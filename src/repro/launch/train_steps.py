@@ -82,8 +82,16 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
 
     With ``use_znorm_cache`` the batch must carry ``sample_ids`` and the
     state a ``znorm`` cache; gradient-norm taps refresh it every step
-    (Algorithm 1).  ``microbatches`` > 1 scans gradient accumulation over
-    the leading batch split (activation memory / global batch trade).
+    (Algorithm 1).  Configure the sampled layers with
+    ``norm_source=NormSource.CACHED_GRAD`` so the cache actually drives
+    the probabilities (ACTIVATION_ONLY ignores it by contract but still
+    warms it through the tap).  ``microbatches`` > 1 scans gradient
+    accumulation over the leading batch split (activation memory /
+    global batch trade).
+
+    Policies with budget schedules: this builder compiles ONE policy
+    resolution (``policy.step`` as given).  Use
+    ``make_scheduled_train_step`` to re-resolve per trainer step.
 
     ``data_axes``: mesh axes carrying the batch dim.  REQUIRED under SPMD
     with microbatches > 1: without an explicit constraint GSPMD may shard
@@ -164,12 +172,52 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
         new_state = dict(state, params=new_params, opt=new_opt,
                          step=step + 1)
         if use_znorm_cache:
+            seq = (model_batch["tokens"].shape[-1]
+                   if "tokens" in model_batch else None)
+            active = znorm.sampling_active_tags(policy, state["znorm"],
+                                                seq_len=seq)
             new_state["znorm"] = znorm.scatter(
-                state["znorm"], batch["sample_ids"], gz)
+                state["znorm"], batch["sample_ids"], gz,
+                active_tags=active)
         metrics = {"loss": loss, "lr": lr, **om}
         return new_state, metrics
 
     return train_step
+
+
+def make_scheduled_train_step(cfg: ArchConfig, policy: cm.Policy,
+                              opt_cfg: optim.AdamWConfig,
+                              schedule: Callable[[jax.Array], jax.Array],
+                              jit: bool = True,
+                              **train_step_kwargs):
+    """(state, batch) -> (state, metrics) with budget schedules resolved
+    against the live step counter.
+
+    Sampling budgets fix static residual shapes, so a schedule cannot be
+    traced — instead the policy is re-resolved at the CONCRETE step read
+    from ``state["step"]`` (one host sync per step, same cost class as
+    reading metrics) and one compiled step is cached per resolved
+    schedule signature.  Piecewise-constant schedules therefore bound
+    the number of recompiles by their plateau count; schedule-free
+    policies compile exactly once.
+    """
+    compiled: Dict[tuple, Callable] = {}
+
+    def step_fn(state, batch):
+        step = int(state["step"])
+        pol = policy.at_step(step)
+        sig = pol.schedule_signature()
+        fn = compiled.get(sig)
+        if fn is None:
+            fn = make_train_step(cfg, pol, opt_cfg, schedule,
+                                 **train_step_kwargs)
+            if jit:
+                fn = jax.jit(fn)
+            compiled[sig] = fn
+        return fn(state, batch)
+
+    step_fn.compiled = compiled     # introspection: one entry per plateau
+    return step_fn
 
 
 def make_prefill_step(cfg: ArchConfig, policy: cm.Policy):

@@ -16,9 +16,11 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import estimator_registry as est_registry
 from repro.core.config import EstimatorKind, WTACRSConfig
 from repro.core.linear import wtacrs_linear
 from repro.core.lora import LoRAConfig, lora_linear
+from repro.core.policy import PolicyRules
 
 
 @jax.tree_util.register_pytree_node_class
@@ -161,9 +163,21 @@ def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
 
 @dataclasses.dataclass(frozen=True)
 class Policy:
-    """What estimator/adapters apply to this forward pass."""
+    """What estimator/adapters apply to this forward pass.
+
+    ``wtacrs`` is the network-wide default estimator config — the
+    trivial one-rule case.  ``rules`` (optional) layers per-tag
+    overrides and budget schedules on top: every ``Ctx.linear`` resolves
+    its fully-prefixed tag through ``config_for``, so e.g. attention
+    projections can stay exact while MLPs sample aggressively.  ``step``
+    is the concrete trainer step the rules' budget schedules resolve
+    against (static per compilation: budgets fix residual shapes; see
+    ``launch.train_steps.make_scheduled_train_step``).
+    """
     wtacrs: WTACRSConfig = WTACRSConfig(kind=EstimatorKind.EXACT)
     lora: LoRAConfig = LoRAConfig()
+    rules: Optional[PolicyRules] = None
+    step: int = 0
     remat: str = "none"            # none | full | wtacrs_names
     flash_block: int = 512
     flash_mode: str = "full"       # full | triangular (perf-iterated)
@@ -174,6 +188,24 @@ class Policy:
     # WTA-CRS sampling groups over the expert capacity dim; set to the
     # data-axis size so per-expert plans stay shard-local
     moe_groups: int = 1
+
+    def config_for(self, tag: str) -> WTACRSConfig:
+        """Estimator config for one fully-prefixed linear tag."""
+        if self.rules is None:
+            return self.wtacrs
+        return self.rules.resolve(tag, step=self.step,
+                                  fallback=self.wtacrs)
+
+    def at_step(self, step: int) -> "Policy":
+        """Resolve budget schedules against a concrete trainer step."""
+        return dataclasses.replace(self, step=int(step))
+
+    def schedule_signature(self) -> Tuple[float, ...]:
+        """Jit-cache key: changes exactly when a schedule crosses a
+        plateau boundary (empty for schedule-free policies)."""
+        if self.rules is None:
+            return ()
+        return self.rules.schedule_signature(self.step)
 
 
 def _tag_seed(tag: str) -> int:
@@ -219,66 +251,78 @@ class Ctx:
             return None
         return jax.random.fold_in(self.key, _tag_seed(tag))
 
-    def linear(self, tag: str, h, w, bias=None, lora=None):
-        """WTA-CRS (+optionally LoRA) linear.  w: Boxed-free raw array."""
-        tag = self.tag_prefix + tag
+    def _record_tag(self, tag: str) -> None:
         if _TAG_SINK is not None and tag not in _TAG_SINK:
             _TAG_SINK.append(tag)
         if self.collect_tags is not None and tag not in self.collect_tags:
             self.collect_tags.append(tag)
+
+    def _znorm_for(self, tag: str, h):
+        if self.znorms is None or tag not in self.znorms:
+            return None
+        zn = self.znorms[tag]
+        lead = h.shape[:-1]
+        if zn.shape != lead:   # broadcast per-sample cache over positions
+            zn = jnp.broadcast_to(
+                zn.reshape(zn.shape + (1,) * (len(lead) - zn.ndim)), lead)
+        return zn
+
+    def linear(self, tag: str, h, w, bias=None, lora=None):
+        """Estimator (+optionally LoRA) linear.  w: Boxed-free raw array.
+
+        The estimator config is resolved per fully-prefixed tag through
+        ``Policy.config_for`` (per-layer rules + budget schedules)."""
+        tag = self.tag_prefix + tag
+        self._record_tag(tag)
+        cfg = self.policy.config_for(tag)
         if self.compute_dtype is not None:
             w = w.astype(self.compute_dtype)
             if bias is not None:
                 bias = bias.astype(self.compute_dtype)
-        zn = None
-        if self.znorms is not None and tag in self.znorms:
-            zn = self.znorms[tag]
-            lead = h.shape[:-1]
-            if zn.shape != lead:   # broadcast per-sample cache over positions
-                zn = jnp.broadcast_to(zn.reshape(zn.shape + (1,) * (len(lead) - zn.ndim)), lead)
+        zn = self._znorm_for(tag, h)
         if lora is not None and self.policy.lora.enabled:
             return lora_linear(h, w, lora["lora_a"], lora["lora_b"],
                                self.policy.lora, key=self._key_for(tag),
-                               znorm=zn, cfg=self.policy.wtacrs, bias=bias)
+                               znorm=zn, cfg=cfg, bias=bias)
         return wtacrs_linear(h, w, key=self._key_for(tag), znorm=zn,
-                             cfg=self.policy.wtacrs, bias=bias)
+                             cfg=cfg, bias=bias)
 
     def linear_shared(self, tags, h, ws, biases=None):
-        """Shared-plan multi-linear (one stored H' for all of ``ws``)."""
-        from repro.core.linear import wtacrs_linear_shared
+        """Shared-plan multi-linear (one stored H' for all of ``ws``).
 
-        for tag in tags:
-            full = self.tag_prefix + tag
-            if _TAG_SINK is not None and full not in _TAG_SINK:
-                _TAG_SINK.append(full)
+        Per-tag resolution: sharing a plan requires all tags to resolve
+        to the SAME config whose estimator supports shared plans; when
+        rules split the group (e.g. attn_q sampled, attn_k exact) each
+        weight falls back to its own independent linear."""
+        full_tags = [self.tag_prefix + t for t in tags]
+        for tag in full_tags:
+            self._record_tag(tag)
+        cfgs = [self.policy.config_for(t) for t in full_tags]
         if self.compute_dtype is not None:
             ws = [w.astype(self.compute_dtype) for w in ws]
             if biases is not None:
                 biases = [None if b is None else
                           b.astype(self.compute_dtype) for b in biases]
-        zn = None
-        if self.znorms is not None:
-            full0 = self.tag_prefix + tags[0]
-            if full0 in self.znorms:
-                zn = self.znorms[full0]
-                lead = h.shape[:-1]
-                if zn.shape != lead:
-                    zn = jnp.broadcast_to(
-                        zn.reshape(zn.shape + (1,) * (len(lead) - zn.ndim)),
-                        lead)
-        if self.policy.wtacrs.kind == EstimatorKind.EXACT or \
-                self.key is None:
-            from repro.core.linear import wtacrs_linear
+        zn = self._znorm_for(full_tags[0], h)
+
+        shareable = (self.key is not None
+                     and all(c == cfgs[0] for c in cfgs)
+                     and not cfgs[0].is_exact
+                     and est_registry.get_estimator(
+                         cfgs[0].kind).supports_shared)
+        if not shareable:
             outs = []
             for i, w in enumerate(ws):
                 bias = None if biases is None else biases[i]
                 outs.append(wtacrs_linear(
-                    h, w, key=self._key_for(tags[i]), znorm=zn,
-                    cfg=self.policy.wtacrs, bias=bias))
+                    h, w, key=self._key_for(tags[i]),
+                    znorm=self._znorm_for(full_tags[i], h),
+                    cfg=cfgs[i], bias=bias))
             return tuple(outs)
+        from repro.core.linear import wtacrs_linear_shared
         return wtacrs_linear_shared(
             h, ws, key=self._key_for("+".join(tags)), znorm=zn,
-            cfg=self.policy.wtacrs, biases=biases)
+            cfg=cfgs[0], biases=biases)
 
     def fold(self, i) -> "Ctx":
         """Sub-context for layer/repeat i (folds the PRNG key)."""

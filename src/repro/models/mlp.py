@@ -18,7 +18,6 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.config import EstimatorKind
 from repro.core.linear import wtacrs_linear
 from repro.models import common as cm
 
@@ -81,13 +80,16 @@ def moe_capacity(cfg, n_tokens: int) -> int:
 
 
 def _expert_ffn(cfg, p, ctx: cm.Ctx, xs: jax.Array) -> jax.Array:
-    """xs: (E, C, D) -> (E, C, D), optionally WTA-CRS'd per expert."""
-    wtacrs_on = (ctx.policy.wtacrs.kind != EstimatorKind.EXACT
-                 and ctx.key is not None)
+    """xs: (E, C, D) -> (E, C, D), optionally WTA-CRS'd per expert.
+
+    The estimator config resolves per tag (``<prefix>moe_expert``) like
+    any dense linear, so rules can keep experts exact while sampling the
+    dense blocks or vice versa."""
+    cfg_w = ctx.policy.config_for(ctx.tag_prefix + "moe_expert")
+    wtacrs_on = not cfg_w.is_exact and ctx.key is not None
     if wtacrs_on:
         e, cap, d = xs.shape
         keys = jax.random.split(ctx._key_for("moe_expert"), e)
-        cfg_w = ctx.policy.wtacrs
         # group-wise sampling: plans stay local to capacity shards
         g = ctx.policy.moe_groups if cap % ctx.policy.moe_groups == 0 else 1
 

@@ -123,3 +123,16 @@ def wsd(base_lr: float, total_steps: int, warmup: int = 500,
 
 SCHEDULES = {"constant": linear_warmup_constant, "cosine": cosine,
              "wsd": wsd}
+
+
+def make_schedule(name: str, base_lr: float, total_steps: int = 0,
+                  warmup: int = 500) -> Callable[[jax.Array], jax.Array]:
+    """LR schedule by name (the string-config counterpart of the budget
+    schedules in ``repro.core.policy``); ``total_steps`` is ignored by
+    ``constant``."""
+    if name == "constant":
+        return linear_warmup_constant(base_lr, warmup=warmup)
+    if name not in SCHEDULES:
+        raise ValueError(f"unknown schedule {name!r}; "
+                         f"one of {sorted(SCHEDULES)}")
+    return SCHEDULES[name](base_lr, total_steps=total_steps, warmup=warmup)

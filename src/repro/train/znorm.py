@@ -13,11 +13,20 @@ the previous step's gradient norms.  Functionally, in JAX:
 
 Tag enumeration runs the model once under eval_shape with the tag
 recorder active, so the cache keys exactly match the WTA-CRS'd linears
-of the architecture.
+of the architecture.  With a per-layer policy, pass it to
+``collect_linear_tags`` so exact-ruled tags are excluded from the cache.
+
+Schedule consistency: a tag whose budget schedule is in its exact phase
+(or whose rule is exact) returns an all-zero tap.  The train step
+resolves the policy's active tags (``sampling_active_tags``) and
+``scatter`` leaves inactive tags' cache entries untouched, so an exact
+warmup cannot poison the cache with zeros before sampling begins —
+while genuine zero norms from active layers (e.g. fully-masked samples)
+are still written faithfully.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,17 +36,26 @@ from repro.models import common as cm
 from repro.models import registry
 
 
-def collect_linear_tags(cfg) -> List[str]:
-    """All WTA-CRS-able linear tags of an architecture, in trace order."""
-    policy = cm.Policy(wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS,
-                                           budget=0.5, min_rows=1))
+def collect_linear_tags(cfg, policy: Optional[cm.Policy] = None
+                        ) -> List[str]:
+    """All WTA-CRS-able linear tags of an architecture, in trace order.
+
+    ``policy``: optional per-layer policy; tags whose resolved estimator
+    is EXACT (at every schedule phase: kind, not budget, decides) are
+    dropped, so the znorm cache only tracks linears that can sample.
+    """
+    trace_policy = cm.Policy(wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS,
+                                                 budget=0.5, min_rows=1))
     batch = registry.train_batch_specs(cfg, 2, 2 * len(cfg.pattern) * 4)
     with cm.tag_recorder() as tags:
         jax.eval_shape(
-            lambda p, b: registry.loss_fn(cfg, p, b, policy,
+            lambda p, b: registry.loss_fn(cfg, p, b, trace_policy,
                                           key=jax.random.PRNGKey(0))[0],
             registry.abstract_params(cfg)[0], batch)
-    return list(tags)
+    out = list(tags)
+    if policy is not None:
+        out = [t for t in out if not policy.config_for(t).is_exact]
+    return out
 
 
 def init_cache(cfg, tags: List[str], n_dataset: int) -> Dict[str, jax.Array]:
@@ -52,11 +70,49 @@ def gather(cache: Dict[str, jax.Array], sample_ids: jax.Array
     return {t: c[:, sample_ids] for t, c in cache.items()}
 
 
+def sampling_active_tags(policy: cm.Policy, tags,
+                         seq_len: Optional[int] = None) -> frozenset:
+    """Tags whose resolved config actually samples this step — the tags
+    whose taps carry fresh norms.
+
+    Mirrors the dispatch short-circuit in ``core.linear``: a layer runs
+    exact (zero tap) when the kind is exact OR ``budget_rows(S) >= S``
+    (min_rows floors small sequences into the exact path even at
+    budget < 1).  Pass the batch token length as ``seq_len`` to apply
+    the full condition; without it only ``budget < 1.0`` is checked.
+    Cache tags all come from token-dim linears (the tag recorder runs
+    over ``Ctx.linear``), so the batch seq is the right S for them.
+    """
+    out = []
+    for t in tags:
+        c = policy.config_for(t)
+        if c.is_exact:
+            continue
+        if seq_len is not None:
+            if c.budget_rows(seq_len) < seq_len:
+                out.append(t)
+        elif c.budget < 1.0:
+            out.append(t)
+    return frozenset(out)
+
+
 def scatter(cache: Dict[str, jax.Array], sample_ids: jax.Array,
-            tap_grads: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    """Write back sqrt(tap) (tap carries squared norms, summed over seq)."""
+            tap_grads: Dict[str, jax.Array],
+            active_tags=None) -> Dict[str, jax.Array]:
+    """Write back sqrt(tap) (tap carries squared norms, summed over seq).
+
+    ``active_tags``: tags whose layer actually ran the sampled path
+    this step (see ``sampling_active_tags``).  Inactive tags — exact
+    schedule phase, exact-ruled — return all-zero taps that would poison
+    the cache, so their entries are left untouched; active tags write
+    their taps verbatim (a genuine zero gradient norm IS the right cache
+    value, and self-corrects because taps are computed from the full dZ).
+    ``None`` treats every tag as active."""
     out = {}
     for t, c in cache.items():
+        if active_tags is not None and t not in active_tags:
+            out[t] = c
+            continue
         z = jnp.sqrt(jnp.maximum(tap_grads[t], 0.0))        # (R, B)
         out[t] = c.at[:, sample_ids].set(z.astype(c.dtype))
     return out

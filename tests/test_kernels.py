@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # degrade: property tests skip, example tests run
+    from conftest import given, settings, st  # noqa: F401
 
 from repro.kernels import ops, ref
 
@@ -99,6 +103,30 @@ def test_sampled_matmul_matches_linear_backward():
     want = h_sub.T @ (dz[plan.idx] * plan.scale[:, None])
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_shared_backward_routes_through_kernel():
+    """use_kernel=True must produce the same shared-plan dW gradients as
+    the jnp dot_general path for the single-sample (B == 1) case."""
+    from repro.core.config import WTACRSConfig
+    from repro.core.linear import wtacrs_linear_shared
+
+    rng = np.random.RandomState(11)
+    h = jnp.asarray(rng.randn(1, 64, 32), jnp.float32)
+    w1 = jnp.asarray(rng.randn(32, 24) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.randn(32, 16) * 0.1, jnp.float32)
+    key = jax.random.PRNGKey(5)
+
+    def loss(ws, use_kernel):
+        cfg = WTACRSConfig(budget=0.25, min_rows=4, use_kernel=use_kernel)
+        a, b = wtacrs_linear_shared(h, ws, key=key, cfg=cfg)
+        return jnp.sum(jnp.sin(a)) + jnp.sum(jnp.cos(b))
+
+    g_jnp = jax.grad(lambda ws: loss(ws, False))((w1, w2))
+    g_ker = jax.grad(lambda ws: loss(ws, True))((w1, w2))
+    for gj, gk in zip(g_jnp, g_ker):
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gj),
+                                   rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("causal", [True, False])

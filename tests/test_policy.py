@@ -1,0 +1,403 @@
+"""Estimator registry + per-layer policy engine.
+
+Covers the API redesign's acceptance criteria: per-tag rule resolution
+(exact and sampled configs coexisting in one forward/backward), the
+sub-sampled-residual guarantee for sampled tags, budget-schedule
+monotonicity, and registry round-trips for estimators defined outside
+core dispatch code.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BudgetSchedule, EXACT_CONFIG, EstimatorKind,
+                        PolicyRules, Rule, WTACRSConfig,
+                        empirical_estimator_stats, exact_matmul,
+                        get_estimator, register_estimator,
+                        registered_estimators, wtacrs_linear)
+from repro.core.plans import SamplePlan
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# Rule resolution
+# ---------------------------------------------------------------------------
+
+class TestRuleResolution:
+    def test_first_match_wins_and_fallback(self):
+        rules = PolicyRules.of(
+            ("*attn*", EXACT_CONFIG),
+            ("*", WTACRSConfig(budget=0.1, min_rows=2)),
+        )
+        fb = WTACRSConfig(budget=0.5)
+        assert rules.resolve("b0/attn_q", fallback=fb).is_exact
+        assert rules.resolve("b3/mlp_wi", fallback=fb).budget == 0.1
+        # no match at all -> fallback
+        only_attn = PolicyRules.of(("*attn*", EXACT_CONFIG))
+        assert only_attn.resolve("b1/mlp_wo", fallback=fb) == fb
+
+    def test_override_dict_inherits_fallback(self):
+        rules = PolicyRules.of(("*mlp*", {"budget": 0.05}))
+        fb = WTACRSConfig(kind=EstimatorKind.CRS, budget=0.5, min_rows=3)
+        got = rules.resolve("b0/mlp_wi", fallback=fb)
+        assert got.budget == 0.05
+        assert got.kind == EstimatorKind.CRS and got.min_rows == 3
+
+    def test_unknown_override_field_rejected(self):
+        with pytest.raises(ValueError):
+            Rule.of("*", {"no_such_field": 1})
+
+    def test_policy_config_for_threads_rules_and_step(self):
+        sched = BudgetSchedule.warmup_exact(begin_step=10, end=0.2)
+        pol = cm.Policy(
+            wtacrs=WTACRSConfig(budget=0.5),
+            rules=PolicyRules.of(("*mlp*", WTACRSConfig(budget=0.2), sched)))
+        assert pol.config_for("b0/mlp_wi").budget == 1.0      # step 0: exact
+        assert pol.at_step(10).config_for("b0/mlp_wi").budget == 0.2
+        assert pol.config_for("b0/attn_q").budget == 0.5      # fallback
+        assert pol.at_step(3).schedule_signature() == (1.0,)
+        assert pol.at_step(11).schedule_signature() == (0.2,)
+
+
+# ---------------------------------------------------------------------------
+# Budget schedules
+# ---------------------------------------------------------------------------
+
+class TestBudgetSchedule:
+    def test_linear_anneal_monotone_and_bounded(self):
+        s = BudgetSchedule.linear(start=1.0, end=0.1, begin_step=10,
+                                  end_step=110, stages=5)
+        budgets = [s.budget_at(t) for t in range(0, 130)]
+        assert budgets[0] == 1.0 and budgets[-1] == 0.1
+        assert all(b1 >= b2 for b1, b2 in zip(budgets, budgets[1:]))
+        assert len(set(budgets)) <= 5 + 1     # quantized plateaus
+        assert all(0.1 <= b <= 1.0 for b in budgets)
+
+    def test_warmup_exact_switches_once(self):
+        s = BudgetSchedule.warmup_exact(begin_step=7, end=0.3)
+        assert [s.budget_at(t) for t in (0, 6, 7, 8)] == [1.0, 1.0, 0.3, 0.3]
+
+    def test_constant(self):
+        assert BudgetSchedule.constant(0.25).budget_at(12345) == 0.25
+
+
+# ---------------------------------------------------------------------------
+# Mixed exact/sampled forward-backward through Ctx
+# ---------------------------------------------------------------------------
+
+def _two_layer_grads(policy, key=jax.random.PRNGKey(3)):
+    """x -(in_proj, d4->d16)- *2 -(mlp_wi, d16->d24)- sum, via Ctx.
+
+    The middle op is residual-free scaling, so the only way the second
+    layer's (B, S, 16) input can appear in the saved residuals is if the
+    estimator stored it."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 4))
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (4, 16)) * 0.3
+    w1 = jax.random.normal(jax.random.PRNGKey(2), (16, 24)) * 0.3
+
+    def f(ws):
+        ctx = cm.Ctx(policy=policy, key=key)
+        h = ctx.linear("in_proj", x, ws[0])
+        t = h * 2.0
+        z = ctx.linear("mlp_wi", t, ws[1])
+        return jnp.sum(jnp.sin(z))
+
+    return f, (w0, w1)
+
+
+class TestMixedPolicyForwardBackward:
+    def test_exact_tag_bit_matches_dense_while_sampled_tag_samples(self):
+        """Two estimator configs on different tags in the same step: the
+        exact-ruled layer's gradient equals the dense reference exactly;
+        the sampled-ruled layer's differs (sub-sampled) but is unbiased
+        in expectation (checked elsewhere)."""
+        mixed = cm.Policy(
+            wtacrs=WTACRSConfig(budget=0.25, min_rows=4),
+            rules=PolicyRules.of(("in_proj", EXACT_CONFIG)))
+        dense = cm.Policy()       # all-exact reference
+
+        f_mixed, ws = _two_layer_grads(mixed)
+        f_dense, _ = _two_layer_grads(dense)
+        g_mixed = jax.grad(f_mixed)(ws)
+        g_dense = jax.grad(f_dense)(ws)
+
+        np.testing.assert_array_equal(np.asarray(g_mixed[0]),
+                                      np.asarray(g_dense[0]))
+        assert not np.allclose(np.asarray(g_mixed[1]),
+                               np.asarray(g_dense[1]))
+
+    def test_sampled_tag_stores_only_subsampled_residuals(self):
+        """The sampled layer's (B, S, 16) input activation must be saved
+        as a (B, k, 16) sub-sample, never in full."""
+        from jax._src.ad_checkpoint import saved_residuals
+
+        mixed = cm.Policy(
+            wtacrs=WTACRSConfig(budget=0.25, min_rows=4),
+            rules=PolicyRules.of(("in_proj", EXACT_CONFIG)))
+        f, ws = _two_layer_grads(mixed)
+        shapes = [tuple(res[0].shape) for res in saved_residuals(f, ws)]
+        k = WTACRSConfig(budget=0.25, min_rows=4).budget_rows(32)
+        assert (2, k, 16) in shapes            # sub-sampled H'
+        assert (2, 32, 16) not in shapes       # full H never saved
+
+    def test_three_estimators_one_forward(self):
+        """exact + wta_crs + stratified_crs coexisting via rules."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 8))
+        w = [jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                               (8, 8)) * 0.3 for i in range(3)]
+        pol = cm.Policy(
+            wtacrs=WTACRSConfig(budget=0.25, min_rows=4),
+            rules=PolicyRules.of(
+                ("l0", EXACT_CONFIG),
+                ("l1", WTACRSConfig(kind="wta_crs", budget=0.25,
+                                    min_rows=4)),
+                ("l2", WTACRSConfig(kind="stratified_crs", budget=0.25,
+                                    min_rows=4))))
+
+        def f(ws):
+            ctx = cm.Ctx(policy=pol, key=jax.random.PRNGKey(5))
+            h = x
+            for i, wi in enumerate(ws):
+                h = jnp.sin(ctx.linear(f"l{i}", h, wi))
+            return jnp.sum(h)
+
+        g = jax.grad(f)(tuple(w))
+        assert all(np.isfinite(np.asarray(gi)).all() for gi in g)
+
+    def test_shared_group_split_by_rules_falls_back_per_weight(self):
+        """attn_q exact + attn_k/v sampled: linear_shared must not share
+        one plan across configs; outputs stay exact-forward either way
+        and gradients stay finite."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 8))
+        ws = [jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                                (8, 8)) * 0.3 for i in range(3)]
+        pol = cm.Policy(
+            wtacrs=WTACRSConfig(budget=0.25, min_rows=4),
+            rules=PolicyRules.of(("attn_q", EXACT_CONFIG)))
+
+        def f(wss):
+            ctx = cm.Ctx(policy=pol, key=jax.random.PRNGKey(5))
+            a, b, c = ctx.linear_shared(("attn_q", "attn_k", "attn_v"),
+                                        x, list(wss))
+            return jnp.sum(jnp.sin(a) + jnp.sin(b) + jnp.sin(c))
+
+        ref = [jnp.einsum("bsd,de->bse", x, w) for w in ws]
+        ctx = cm.Ctx(policy=pol, key=jax.random.PRNGKey(5))
+        outs = ctx.linear_shared(("attn_q", "attn_k", "attn_v"), x, ws)
+        for o, r in zip(outs, ref):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       rtol=2e-5, atol=2e-5)
+        g = jax.grad(f)(tuple(ws))
+        assert all(np.isfinite(np.asarray(gi)).all() for gi in g)
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trip
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_builtins_registered_with_signatures(self):
+        reg = registered_estimators()
+        assert {"crs", "det_topk", "wta_crs", "stratified_crs"} <= set(reg)
+        assert reg["det_topk"].needs_key is False
+        assert reg["det_topk"].biased is True
+        assert reg["wta_crs"].needs_key is True
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError):
+            register_estimator("crs")(lambda p, k, key, cfg=None: None)
+
+    def test_exact_is_not_registrable(self):
+        with pytest.raises(ValueError):
+            register_estimator("exact")(lambda p, k, key, cfg=None: None)
+
+    def test_unknown_kind_raises_with_registered_names(self):
+        with pytest.raises(KeyError, match="no_such_estimator"):
+            get_estimator("no_such_estimator")
+
+    def test_roundtrip_new_estimator_via_policy_rules(self):
+        """register -> resolve by name through PolicyRules -> dispatch in
+        a linear backward, all without touching core dispatch code."""
+
+        @register_estimator("test_uniform_crs", needs_key=True,
+                            overwrite=True)
+        def _uniform_crs(p, k, key, cfg=None):
+            m = p.shape[0]
+            idx = jax.random.randint(key, (k,), 0, m).astype(jnp.int32)
+            scale = jnp.full((k,), m / k, dtype=p.dtype)
+            return SamplePlan(idx, scale, jnp.zeros((), jnp.int32),
+                              jnp.zeros((), p.dtype))
+
+        rules = PolicyRules.of(("*mlp*", {"kind": "test_uniform_crs"}))
+        cfg = rules.resolve("b0/mlp_wi",
+                            fallback=WTACRSConfig(budget=0.5, min_rows=4))
+        assert cfg.kind == "test_uniform_crs"
+
+        h = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 8))
+        w = jax.random.normal(jax.random.PRNGKey(1), (8, 6)) * 0.3
+        g = jax.grad(lambda ww: jnp.sum(jnp.sin(wtacrs_linear(
+            h, ww, key=jax.random.PRNGKey(2), cfg=cfg))))(w)
+        assert np.isfinite(np.asarray(g)).all()
+
+    @pytest.mark.parametrize("kind", ["stratified_crs", "crs"])
+    def test_registered_unbiased_estimators_are_unbiased(self, kind):
+        """Monte-Carlo mean of every unbiased registry entry converges to
+        the exact product (the estimator-mean harness)."""
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (8, 96))
+        y = jax.random.normal(jax.random.fold_in(key, 1), (96, 7))
+        cfg = WTACRSConfig(kind=kind, budget=0.3, min_rows=4)
+        mean, _ = empirical_estimator_stats(x, y, cfg,
+                                            jax.random.PRNGKey(2), 3000)
+        exact = exact_matmul(x, y)
+        rel = float(jnp.linalg.norm(mean - exact) / jnp.linalg.norm(exact))
+        assert rel < 0.05, f"{kind}: mean off by {rel}"
+
+    def test_stratified_never_higher_variance_than_crs(self):
+        key = jax.random.PRNGKey(7)
+        x = jax.random.normal(key, (8, 128))
+        x = x * (1.0 + 6.0 * (jax.random.uniform(
+            jax.random.fold_in(key, 2), (1, 128)) > 0.85))
+        y = jax.random.normal(jax.random.fold_in(key, 1), (128, 6))
+        _, v_crs = empirical_estimator_stats(
+            x, y, WTACRSConfig(kind="crs", budget=0.3, min_rows=4),
+            jax.random.PRNGKey(3), 2000)
+        _, v_strat = empirical_estimator_stats(
+            x, y, WTACRSConfig(kind="stratified_crs", budget=0.3,
+                               min_rows=4),
+            jax.random.PRNGKey(4), 2000)
+        assert float(v_strat) <= float(v_crs) * 1.05
+
+
+# ---------------------------------------------------------------------------
+# NormSource is authoritative
+# ---------------------------------------------------------------------------
+
+class TestNormSource:
+    def test_activation_only_ignores_supplied_znorm_for_sampling(self):
+        """Identical plans with and without a znorm under ACTIVATION_ONLY
+        (same key): gradients must be bit-identical."""
+        from repro.core.config import NormSource
+
+        h = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 8))
+        w = jax.random.normal(jax.random.PRNGKey(1), (8, 6)) * 0.3
+        zn = jax.random.uniform(jax.random.PRNGKey(2), (2, 32)) + 0.1
+        cfg = WTACRSConfig(budget=0.25, min_rows=4,
+                           norm_source=NormSource.ACTIVATION_ONLY)
+
+        def g(znorm):
+            return jax.grad(lambda ww: jnp.sum(jnp.sin(wtacrs_linear(
+                h, ww, key=jax.random.PRNGKey(3), znorm=znorm,
+                cfg=cfg))))(w)
+
+        np.testing.assert_array_equal(np.asarray(g(zn)), np.asarray(g(None)))
+        # but CACHED_GRAD consults it: different plans, different grads
+        cfg_cached = dataclasses.replace(
+            cfg, norm_source=NormSource.CACHED_GRAD)
+        g_cached = jax.grad(lambda ww: jnp.sum(jnp.sin(wtacrs_linear(
+            h, ww, key=jax.random.PRNGKey(3), znorm=zn,
+            cfg=cfg_cached))))(w)
+        assert not np.allclose(np.asarray(g_cached), np.asarray(g(None)))
+
+    def test_tap_still_flows_under_activation_only(self):
+        from repro.core import read_grad_norm_tap
+
+        h = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 8))
+        w = jax.random.normal(jax.random.PRNGKey(1), (8, 6)) * 0.3
+        zn = jnp.ones((2, 32))
+        cfg = WTACRSConfig(budget=0.25, min_rows=4)
+        gz = jax.grad(lambda z: jnp.sum(jnp.sin(wtacrs_linear(
+            h, w, key=jax.random.PRNGKey(3), znorm=z, cfg=cfg))),
+        )(zn)
+        dz = jnp.cos(jnp.einsum("bsd,de->bse", h, w))
+        np.testing.assert_allclose(
+            np.asarray(read_grad_norm_tap(gz)),
+            np.asarray(jnp.linalg.norm(dz, axis=-1)), rtol=1e-4, atol=1e-4)
+
+
+    def test_norm_source_typo_rejected(self):
+        with pytest.raises(ValueError):
+            WTACRSConfig(norm_source="cached")   # not a NormSource value
+
+
+# ---------------------------------------------------------------------------
+# znorm cache consistency with per-layer policies
+# ---------------------------------------------------------------------------
+
+class TestZnormScatterPolicy:
+    def test_inactive_tags_keep_cache_and_active_zeros_write(self):
+        from repro.train import znorm
+
+        pol = cm.Policy(
+            wtacrs=WTACRSConfig(budget=0.5, min_rows=2),
+            rules=PolicyRules.of(("exact_tag", EXACT_CONFIG)))
+        tags = ["exact_tag", "sampled_tag"]
+        active = znorm.sampling_active_tags(pol, tags)
+        assert active == frozenset({"sampled_tag"})
+
+        cache = {t: jnp.full((1, 4), 7.0) for t in tags}
+        ids = jnp.array([1, 2], jnp.int32)
+        taps = {t: jnp.zeros((1, 2)) for t in tags}   # exact phase / masked
+        new = znorm.scatter(cache, ids, taps, active_tags=active)
+        # exact tag untouched; active tag's genuine zeros written
+        np.testing.assert_array_equal(np.asarray(new["exact_tag"]),
+                                      np.asarray(cache["exact_tag"]))
+        np.testing.assert_array_equal(
+            np.asarray(new["sampled_tag"]), [[7.0, 0.0, 0.0, 7.0]])
+
+    def test_warmup_phase_is_inactive(self):
+        from repro.train import znorm
+
+        sched = BudgetSchedule.warmup_exact(begin_step=5, end=0.3)
+        pol = cm.Policy(rules=PolicyRules.of(
+            ("*", WTACRSConfig(budget=0.3, min_rows=2), sched)))
+        assert znorm.sampling_active_tags(pol, ["t"]) == frozenset()
+        assert znorm.sampling_active_tags(
+            pol.at_step(5), ["t"]) == frozenset({"t"})
+
+    def test_min_rows_floor_mirrors_dispatch_short_circuit(self):
+        """budget < 1 but budget_rows(S) >= S (min_rows floor) means the
+        layer ran exact: its zero tap must not be written to the cache."""
+        from repro.train import znorm
+
+        pol = cm.Policy(wtacrs=WTACRSConfig(budget=0.5, min_rows=8))
+        # S = 8: budget_rows(8) = max(8, 4) = 8 -> exact path -> inactive
+        assert znorm.sampling_active_tags(pol, ["t"],
+                                          seq_len=8) == frozenset()
+        # S = 32: budget_rows(32) = 16 < 32 -> sampled -> active
+        assert znorm.sampling_active_tags(
+            pol, ["t"], seq_len=32) == frozenset({"t"})
+
+
+# ---------------------------------------------------------------------------
+# Scheduled train step (step counter threading)
+# ---------------------------------------------------------------------------
+
+class TestScheduledTrainStep:
+    def test_warmup_schedule_recompiles_once_and_trains(self):
+        from repro.configs import get_config
+        from repro.launch import train_steps
+        from repro.models import registry as model_registry
+        from repro.train import optim
+
+        cfg = get_config("qwen2.5-3b", reduced=True)
+        pol = cm.Policy(
+            wtacrs=WTACRSConfig(budget=0.5, min_rows=4),
+            rules=PolicyRules.of(
+                ("*mlp*", WTACRSConfig(budget=0.5, min_rows=4),
+                 BudgetSchedule.warmup_exact(begin_step=2, end=0.5))))
+        state = train_steps.init_train_state(cfg, jax.random.PRNGKey(0))
+        step = train_steps.make_scheduled_train_step(
+            cfg, pol, optim.AdamWConfig(),
+            optim.linear_warmup_constant(1e-3))
+        batch = model_registry.make_synthetic_batch(
+            cfg, 2, 16, jax.random.PRNGKey(1))
+        for _ in range(3):
+            state, metrics = step(state, batch)
+            assert np.isfinite(float(metrics["loss"]))
+        assert int(state["step"]) == 3
+        # exact phase (steps 0-1) + sampled phase (step 2) = 2 compiles
+        assert len(step.compiled) == 2
