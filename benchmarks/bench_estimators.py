@@ -131,3 +131,23 @@ def run():
             jax.random.PRNGKey(6), 1500)
         emit(f"registry_variance_vs_crs@{name}", 0.0,
              f"var/var_crs={float(v / v_ref):.3f}")
+
+    # batched fused-backward kernel vs the jnp gather + dot_general path
+    # (dW = sum_b H'_b^T @ (dZ_b[idx_b] * scale_b)).  On CPU the kernel
+    # runs through the Pallas interpreter, so the absolute number is a
+    # correctness-path datapoint; on TPU it compiles natively and this
+    # entry is the Table-3 overhead measurement at a realistic batch.
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels import ref as kernel_ref
+    kb, kn, kdi, kdo, kk = 8, 256, 256, 256, 77
+    bkey = jax.random.PRNGKey(7)
+    hs = jax.random.normal(bkey, (kb, kk, kdi))
+    dzb = jax.random.normal(jax.random.fold_in(bkey, 1), (kb, kn, kdo))
+    idxb = jax.random.randint(jax.random.fold_in(bkey, 2), (kb, kk), 0, kn)
+    scaleb = jax.random.uniform(jax.random.fold_in(bkey, 3), (kb, kk))
+    t_ker = time_jit(kernel_ops.sampled_matmul, hs, dzb, idxb, scaleb)
+    t_jnp = time_jit(jax.jit(kernel_ref.sampled_matmul_batched_ref),
+                     hs, dzb, idxb, scaleb)
+    emit(f"sampled_dw_kernel_vs_jnp@B{kb}", t_ker,
+         f"jnp_us={t_jnp:.1f} ratio={t_ker / t_jnp:.2f} "
+         f"(B={kb},n={kn},k={kk},d={kdi}x{kdo}; interpret mode on CPU)")

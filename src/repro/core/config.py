@@ -65,8 +65,9 @@ class WTACRSConfig:
       deterministic_fraction_cap: upper bound on |C|/k.  1.0 reproduces the
         paper exactly (|C| chosen by Theorem 2); smaller values force some
         stochastic budget, useful for ablations.
-      use_kernel: route the backward sampled GEMM through the Pallas kernel
-        (TPU target; interpret-mode on CPU) instead of plain jnp.
+      use_kernel: route the backward sampled GEMM through the batched
+        Pallas kernel (any B; TPU target, interpret-mode on CPU) instead
+        of the jnp gather + dot_general path.
     """
 
     kind: Union[EstimatorKind, str] = EstimatorKind.WTA_CRS

@@ -50,6 +50,7 @@ import numpy as np
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.core import estimator_registry as registry
+from repro.core import plans
 from repro.core.config import NormSource, WTACRSConfig
 
 _EPS = 1e-30
@@ -79,7 +80,6 @@ def _make_plans(h, znorm, key_data, cfg: WTACRSConfig, k: int):
     znorm term enters the probabilities only under CACHED_GRAD (the
     config is authoritative; see NormSource).
     """
-    b = h.shape[0]
     h_norms = _row_norms(h)                                   # (B, S)
     if cfg.norm_source == NormSource.CACHED_GRAD:
         weights = h_norms * znorm.astype(jnp.float32)
@@ -89,13 +89,7 @@ def _make_plans(h, znorm, key_data, cfg: WTACRSConfig, k: int):
     uniform = jnp.full_like(weights, 1.0 / weights.shape[-1])
     p = jnp.where(totals > 0, weights / jnp.maximum(totals, _EPS), uniform)
 
-    spec = registry.get_estimator(cfg.kind)
-    if spec.needs_key:
-        key = jax.random.wrap_key_data(key_data)
-        keys = jax.random.split(key, b)
-        plan = jax.vmap(lambda pr, kk: spec.build(pr, k, kk, cfg))(p, keys)
-    else:
-        plan = jax.vmap(lambda pr: spec.build(pr, k, None, cfg))(p)
+    plan = plans.build_batched_plans(p, k, key_data, cfg)
     return plan.idx, plan.scale
 
 
@@ -106,14 +100,19 @@ def _rowgather(x: jax.Array, idx: jax.Array) -> jax.Array:
 
 
 def _sampled_dw(h_sub, dz, idx, scale, cfg: WTACRSConfig, out_dtype):
-    """dW = H'^T @ (dZ[idx] * scale) — Pallas kernel when enabled and the
-    plan is single-sample (B == 1), else a batched dot_general."""
-    if cfg.use_kernel and h_sub.shape[0] == 1:
+    """dW = sum_b H'_b^T @ (dZ_b[idx_b] * scale_b) — the batched Pallas
+    kernel when ``cfg.use_kernel`` (any B; the gather is fused into the
+    GEMM's k-loop so no gathered dZ' is ever materialized), else a
+    gather + batched dot_general."""
+    if cfg.use_kernel:
         from repro.kernels import ops as kernel_ops
-        dw = kernel_ops.sampled_matmul(h_sub[0], dz[0], idx[0], scale[0])
+        dw = kernel_ops.sampled_matmul(h_sub, dz, idx, scale)
     else:
         dz_sub = _rowgather(dz, idx)                           # (B, k, E)
-        dz_sub = dz_sub * scale[:, :, None].astype(dz_sub.dtype)
+        # scale in f32, round once back to the compute dtype (same
+        # rounding the kernel applies before feeding the MXU)
+        dz_sub = (dz_sub.astype(jnp.float32)
+                  * scale[:, :, None]).astype(dz_sub.dtype)
         dw = jax.lax.dot_general(
             h_sub, dz_sub, (((0, 1), (0, 1)), ((), ())),
             preferred_element_type=jnp.float32)

@@ -40,7 +40,15 @@ _EPS = 1e-30
 
 
 class SamplePlan(NamedTuple):
-    """Static-shape sampling plan over a contraction dimension of size m."""
+    """Static-shape sampling plan over a contraction dimension of size m.
+
+    A plan is agnostic to WHICH model dimension it sub-samples — token,
+    expert-capacity, or flattened rows all look like "a contraction dim
+    of size m" here.  The dimension a given linear samples over is
+    recorded as tag metadata at trace time (``repro.models.common``
+    sampled-dim recording); consumers that assume a particular dim (the
+    per-sample znorm cache assumes tokens) must check that metadata
+    rather than the plan."""
 
     idx: jax.Array        # (k,) int32 indices into the contraction dim
     scale: jax.Array      # (k,) f32 per-slot scale factors
@@ -153,6 +161,25 @@ def _det_topk_builder(p, k, key, cfg=None) -> SamplePlan:
 def _wtacrs_builder(p, k, key, cfg=None) -> SamplePlan:
     cap = 1.0 if cfg is None else cfg.deterministic_fraction_cap
     return wtacrs_plan(p, k, key, cap)
+
+
+def build_batched_plans(p: jax.Array, k: int, key_data, cfg) -> SamplePlan:
+    """Vmapped per-sample plan building: p (B, m) -> SamplePlan with
+    (B, k) idx/scale leaves, one independent plan per batch element.
+
+    ``key_data`` is raw PRNG key data (``jax.random.key_data``) so the
+    caller can thread it through a custom_vjp; it is split into one key
+    per sample for estimators that need randomness.  This is the plan
+    layout the batched Pallas backward kernel consumes directly (its
+    scalar-prefetched (B, k) index/scale operands).
+    """
+    b = p.shape[0]
+    spec = registry.get_estimator(cfg.kind)
+    if spec.needs_key:
+        key = jax.random.wrap_key_data(key_data)
+        keys = jax.random.split(key, b)
+        return jax.vmap(lambda pr, kk: spec.build(pr, k, kk, cfg))(p, keys)
+    return jax.vmap(lambda pr: spec.build(pr, k, None, cfg))(p)
 
 
 def build_plan(kind, p: jax.Array, k: int, key: Optional[jax.Array],

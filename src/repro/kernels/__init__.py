@@ -3,7 +3,9 @@
 Kernels (each: <name>.py kernel body, ops.py jit'd wrapper, ref.py oracle):
   * row_norms      -- per-row L2 norms feeding the column-row distribution
   * gather_scale   -- scalar-prefetched sub-sample gather (build H')
-  * sampled_matmul -- fused gather+scale+GEMM for dW = H'^T (dZ[idx]*scale)
+  * sampled_matmul -- fused gather+scale+GEMM for the batched backward
+                      dW = sum_b H'_b^T (dZ_b[idx_b]*scale_b) (B is an
+                      outer grid dim; per-sample scalar-prefetched plans)
   * flash_attention -- fused online-softmax attention fwd (serving path;
                        p-blocks stay in VMEM -- the §Perf next-step fix)
 """

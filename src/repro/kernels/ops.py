@@ -74,19 +74,29 @@ def gather_scale(x: jax.Array, idx: jax.Array, scale: jax.Array, *,
 def sampled_matmul(hsub: jax.Array, dz: jax.Array, idx: jax.Array,
                    scale: jax.Array, *, bm: int = 128, bn: int = 128,
                    bk: int = 128, interpret: bool | None = None) -> jax.Array:
-    """dW = hsub^T @ (dz[idx] * scale) with the gather fused into the GEMM."""
+    """dW = sum_b hsub_b^T @ (dz_b[idx_b] * scale_b), gather fused into
+    the GEMM's k-loop.
+
+    Batched form: hsub (B, k, d_in), dz (B, n, d_out), idx/scale (B, k).
+    2-D operands (the single-sample case) are accepted and treated as
+    B == 1.  Returns (d_in, d_out) f32 — the batch-summed dW.
+    """
     if interpret is None:
         interpret = _on_cpu()
-    k, d_in = hsub.shape
-    d_out = dz.shape[1]
+    if hsub.ndim == 2:
+        hsub, dz = hsub[None], dz[None]
+        idx, scale = idx[None], scale[None]
+    b, k, d_in = hsub.shape
+    d_out = dz.shape[2]
     bm, bn, bk = min(bm, d_in), min(bn, d_out), min(bk, k)
-    hp = _pad_cols(_pad_rows(hsub, bk), bm)
-    dzp = _pad_cols(dz, bn)
+    hp = jax.vmap(lambda h: _pad_cols(_pad_rows(h, bk), bm))(hsub)
+    dzp = jax.vmap(lambda z: _pad_cols(z, bn))(dz)
     pad_k = (-k) % bk
     idxp = jnp.concatenate(
-        [idx.astype(jnp.int32), jnp.zeros((pad_k,), jnp.int32)])
+        [idx.astype(jnp.int32), jnp.zeros((b, pad_k), jnp.int32)], axis=1)
     scalep = jnp.concatenate(
-        [scale.astype(jnp.float32), jnp.zeros((pad_k,), jnp.float32)])
+        [scale.astype(jnp.float32), jnp.zeros((b, pad_k), jnp.float32)],
+        axis=1)
     out = _smm.sampled_matmul(hp, dzp, idxp, scalep, bm=bm, bn=bn, bk=bk,
                               interpret=interpret)
     return out[:d_in, :d_out]

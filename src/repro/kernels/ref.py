@@ -37,6 +37,17 @@ def sampled_matmul_ref(hsub: jax.Array, dz: jax.Array, idx: jax.Array,
     return jnp.dot(hsub.astype(jnp.float32).T, dz_sub)
 
 
+def sampled_matmul_batched_ref(hsub: jax.Array, dz: jax.Array,
+                               idx: jax.Array, scale: jax.Array) -> jax.Array:
+    """dW = sum_b H'_b^T @ (dZ_b[idx_b] * scale_b): batched per-sample
+    plans reduced into one (d_in, d_out) f32 weight gradient.
+
+    hsub: (B, k, d_in), dz: (B, n, d_out), idx/scale: (B, k).
+    """
+    per_sample = jax.vmap(sampled_matmul_ref)(hsub, dz, idx, scale)
+    return jnp.sum(per_sample, axis=0)
+
+
 def flash_attention_fwd_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                             group: int = 1, causal: bool = True
                             ) -> jax.Array:

@@ -1,25 +1,35 @@
 """Pallas TPU kernel: fused gather + scale + GEMM for the WTA-CRS backward.
 
-Computes   dW = H'^T @ (dZ[idx] * scale)   without materializing dZ[idx].
+Computes   dW = sum_b H'_b^T @ (dZ_b[idx_b] * scale_b)   for a batch of
+per-sample plans, without ever materializing any gathered dZ'.
 
 This is the hot spot the paper optimizes: in their PyTorch implementation
 the explicit sampling + data movement makes the approximated linear ~20%
 slower than the exact one (Table 3).  On TPU we fuse the gather into the
 GEMM's k-loop: dZ stays in HBM (memory_space=ANY); each k-block's rows are
-DMA'd into a VMEM scratch buffer by explicit `make_async_copy`s driven by
-the scalar-prefetched index vector, then fed to the MXU.  The gather thus
+DMA'd into a double-buffered VMEM scratch by explicit `make_async_copy`s
+driven by the scalar-prefetched per-sample index vectors (row r+1's DMA is
+in flight while row r is awaited), then fed to the MXU.  The gather thus
 costs exactly the HBM reads a dense GEMM of the same k would have done —
 the "extra data movement" of the GPU implementation disappears.
 
-Grid: (d_in/bm, d_out/bn, k/bk), k innermost so the f32 accumulator lives
-in VMEM across the contraction.  MXU alignment: bm, bn, bk multiples of
-128 on real hardware (tests use small blocks in interpret mode).
+Grid: (d_in/bm, d_out/bn, B, k/bk) with the batch and k dimensions
+innermost, so the single f32 accumulator tile lives in VMEM across the
+whole sum-over-batch contraction: it is zeroed at (b, s) == (0, 0) and the
+(bm, bn) output tile is written once at the last (b, s) step.  Sampling is
+PER-SAMPLE (see core.linear): every batch element carries its own index
+and scale vector, read from the prefetched (B, k) scalar operands at block
+offset (b, s * bk).
+
+MXU alignment: bm, bn, bk multiples of 128 on real hardware (tests use
+small blocks in interpret mode).  B needs no padding — it is an exact
+grid dimension.
 
 Adaptation note (DESIGN.md §Hardware-adaptation): the paper's CUDA path
-materializes dZ' with a gather kernel, then calls cuBLAS.  There is no
-TPU equivalent of a standalone fast gather into HBM — instead the DMA
-engine overlaps row fetches with MXU work inside one kernel, which is the
-TPU-native expression of the same idea.
+materializes dZ' with a gather kernel, then calls cuBLAS per sample.
+There is no TPU equivalent of a standalone fast gather into HBM — instead
+the DMA engine overlaps row fetches with MXU work inside one kernel, which
+is the TPU-native expression of the same idea.
 """
 from __future__ import annotations
 
@@ -32,34 +42,49 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _sampled_matmul_kernel(idx_ref, scale_ref, hsub_ref, dz_hbm, o_ref,
-                           dzbuf, sem, acc_ref, *, bk: int, bn: int,
-                           nsteps: int):
+                           dzbuf, sems, acc_ref, *, bk: int, bn: int,
+                           nb: int, nsteps: int):
     j = pl.program_id(1)
-    s = pl.program_id(2)
+    b = pl.program_id(2)
+    s = pl.program_id(3)
 
-    @pl.when(s == 0)
+    @pl.when(jnp.logical_and(b == 0, s == 0))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Gather this k-block's rows of dZ (only the current n-slice) into VMEM.
+    # Gather this (sample, k-block)'s rows of dZ (only the current n-slice)
+    # into VMEM.  Double-buffered: each row lands in its own dzbuf row, the
+    # two DMA semaphores alternate so row r+1's copy overlaps row r's wait.
+    def _dma(r):
+        row = idx_ref[b, s * bk + r]
+        return pltpu.make_async_copy(
+            dz_hbm.at[b, row, pl.ds(j * bn, bn)], dzbuf.at[r],
+            sems.at[r % 2])
+
+    _dma(0).start()
+
     def _fetch(r, _):
-        row = idx_ref[s * bk + r]
-        cp = pltpu.make_async_copy(
-            dz_hbm.at[row, pl.ds(j * bn, bn)], dzbuf.at[r], sem)
-        cp.start()
-        cp.wait()
+        @pl.when(r + 1 < bk)
+        def _next():
+            _dma(r + 1).start()
+
+        _dma(r).wait()
         return 0
 
     jax.lax.fori_loop(0, bk, _fetch, 0, unroll=True)
 
-    scales = jax.lax.dynamic_slice(scale_ref[...], (s * bk,), (bk,))
-    dzb = dzbuf[...].astype(jnp.float32) * scales[:, None]
+    scales = jax.lax.dynamic_slice(scale_ref[...], (b, s * bk),
+                                   (1, bk)).reshape(bk)
+    # Scale in f32, round ONCE back to the input dtype: feeds the MXU at
+    # its native (bf16) rate while matching the jnp fallback's rounding.
+    dzb = (dzbuf[...].astype(jnp.float32)
+           * scales[:, None]).astype(dzbuf.dtype)
     # (bk, bm)^T @ (bk, bn) -> (bm, bn) on the MXU, f32 accumulation.
     acc_ref[...] += jax.lax.dot_general(
-        hsub_ref[...].astype(jnp.float32), dzb,
+        hsub_ref[0], dzb,
         (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
-    @pl.when(s == nsteps - 1)
+    @pl.when(jnp.logical_and(b == nb - 1, s == nsteps - 1))
     def _finish():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
@@ -67,29 +92,30 @@ def _sampled_matmul_kernel(idx_ref, scale_ref, hsub_ref, dz_hbm, o_ref,
 def sampled_matmul(hsub: jax.Array, dz: jax.Array, idx: jax.Array,
                    scale: jax.Array, *, bm: int = 128, bn: int = 128,
                    bk: int = 128, interpret: bool = False) -> jax.Array:
-    """dW (d_in, d_out) = hsub^T @ (dz[idx] * scale), f32 output.
+    """dW (d_in, d_out) = sum_b hsub_b^T @ (dz_b[idx_b] * scale_b), f32.
 
-    hsub: (k, d_in), dz: (n, d_out), idx/scale: (k,).  Shapes must tile
-    evenly by (bk, bm, bn); ops.py handles padding.
+    hsub: (B, k, d_in), dz: (B, n, d_out), idx/scale: (B, k).  Shapes must
+    tile evenly by (bk, bm, bn); ops.py handles padding (padded index
+    slots point at row 0 with scale 0, so they contribute nothing).
     """
-    k, d_in = hsub.shape
-    n, d_out = dz.shape
+    nb, k, d_in = hsub.shape
+    d_out = dz.shape[2]
     bm, bn, bk = min(bm, d_in), min(bn, d_out), min(bk, k)
-    grid = (d_in // bm, d_out // bn, k // bk)
+    grid = (d_in // bm, d_out // bn, nb, k // bk)
     return pl.pallas_call(
         functools.partial(_sampled_matmul_kernel, bk=bk, bn=bn,
-                          nsteps=grid[2]),
+                          nb=nb, nsteps=grid[3]),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((bk, bm), lambda i, j, s, *_: (s, i)),
+                pl.BlockSpec((1, bk, bm), lambda i, j, b, s, *_: (b, s, i)),
                 pl.BlockSpec(memory_space=pl.ANY),
             ],
-            out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, *_: (i, j)),
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, b, s, *_: (i, j)),
             scratch_shapes=[
                 pltpu.VMEM((bk, bn), dz.dtype),
-                pltpu.SemaphoreType.DMA,
+                pltpu.SemaphoreType.DMA((2,)),
                 pltpu.VMEM((bm, bn), jnp.float32),
             ],
         ),

@@ -12,20 +12,31 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """Version-compat ``jax.make_mesh``: jax >= 0.5 takes an
+    ``axis_types`` kwarg (and we pin the default, Auto, explicitly);
+    jax 0.4.x has neither ``jax.sharding.AxisType`` nor the kwarg, and
+    Auto is the only behavior.  Use this everywhere instead of calling
+    ``jax.make_mesh`` directly."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Whatever devices exist locally (tests/examples on CPU)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model_parallel, model_parallel),
+                     ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

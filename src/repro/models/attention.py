@@ -166,15 +166,32 @@ def decode_attention(q1: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
     q1: (B, 1, H, Dh).  cache_len: scalar or (B,) number of valid positions
     (the new token's K/V must already be written at cache_len-1).
+
+    Numerics mirror ``flash_attention``'s block step exactly: scores and
+    softmax statistics in f32, UNNORMALIZED probabilities rounded to the
+    cache dtype before the PV product, normalization by l afterwards.
+    The earlier formulation (f32 softmax, f32 PV) was mathematically
+    equivalent but rounded differently from the training/teacher-forced
+    path — in bf16 the O(eps) drift was enough to flip near-tied MoE
+    router top-k decisions between decode and forward, which showed up as
+    rare ~1.5-magnitude logit divergences on dbrx (the decode-consistency
+    failure formerly deselected in CI).  With matched rounding, cached
+    decode bit-matches the forward pass whenever the context fits one KV
+    block (masked positions contribute exp(NEG_INF - m) == 0 exactly).
     """
     b, _, h, dh = q1.shape
     smax, kvh = k_cache.shape[1], k_cache.shape[2]
     g = h // kvh
+    scale = 1.0 / math.sqrt(dh)
     qr = q1.reshape(b, kvh, g, dh).astype(jnp.float32)
     s = jnp.einsum("bhgd,bkhd->bhgk", qr,
-                   k_cache.astype(jnp.float32)) / math.sqrt(dh)
+                   k_cache.astype(jnp.float32)) * scale
     valid = jnp.arange(smax)[None] < jnp.reshape(cache_len, (-1, 1))
     s = jnp.where(valid[:, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bhgk,bkhd->bhgd", p.astype(q1.dtype),
+                    v_cache).astype(jnp.float32)
+    o = pv / jnp.maximum(l, 1e-30)[..., None]
     return o.reshape(b, 1, h, dh).astype(q1.dtype)

@@ -212,22 +212,40 @@ def _tag_seed(tag: str) -> int:
     return zlib.crc32(tag.encode()) & 0x7FFFFFFF
 
 
-# Module-level tag sink: when active, every Ctx.linear records its tag.
-# Used by repro.train.znorm to enumerate the WTA-CRS'd linears of an
+# Sampled-dimension tag metadata.  A linear whose input is (..., S, D)
+# draws one plan per leading index over the S (token) dim; a 2-D input
+# (N, D) is a single flattened sample over all N rows (e.g. the MoE
+# router over batch*seq, or an expert FFN over capacity slots).  The
+# distinction matters to consumers that assume per-dataset-sample
+# structure — the znorm cache scatters taps by sample id and would
+# silently mis-scatter a rows-sampled tag — so it is recorded alongside
+# the tag and asserted on, instead of being an implicit convention.
+SAMPLED_DIM_TOKEN = "token"   # per-sample plans over the token dim
+SAMPLED_DIM_ROWS = "rows"     # one plan over all (flattened) rows
+
+# Module-level tag sink: when active, every Ctx.linear records its tag
+# (and the dimension it samples over, in the twin dims dict).  Used by
+# repro.train.znorm to enumerate the WTA-CRS'd linears of an
 # architecture (the keys of the gradient-norm cache).
 _TAG_SINK: Optional[list] = None
+_TAG_DIMS: Optional[dict] = None
 
 
 class tag_recorder:
+    """Records every Ctx.linear tag in trace order; ``.dims`` maps each
+    recorded tag to its sampled dimension (SAMPLED_DIM_*)."""
+
     def __enter__(self):
-        global _TAG_SINK
-        self._old = _TAG_SINK
+        global _TAG_SINK, _TAG_DIMS
+        self._old = (_TAG_SINK, _TAG_DIMS)
         _TAG_SINK = []
+        _TAG_DIMS = {}
+        self.dims = _TAG_DIMS
         return _TAG_SINK
 
     def __exit__(self, *exc):
-        global _TAG_SINK
-        _TAG_SINK = self._old
+        global _TAG_SINK, _TAG_DIMS
+        _TAG_SINK, _TAG_DIMS = self._old
         return False
 
 
@@ -251,9 +269,16 @@ class Ctx:
             return None
         return jax.random.fold_in(self.key, _tag_seed(tag))
 
-    def _record_tag(self, tag: str) -> None:
+    def _record_tag(self, tag: str, sampled_dim: str) -> None:
         if _TAG_SINK is not None and tag not in _TAG_SINK:
             _TAG_SINK.append(tag)
+        if _TAG_DIMS is not None:
+            prev = _TAG_DIMS.setdefault(tag, sampled_dim)
+            if prev != sampled_dim:
+                raise ValueError(
+                    f"linear tag {tag!r} sampled over {sampled_dim!r} but "
+                    f"was previously recorded sampling over {prev!r}; one "
+                    f"tag must sample one dimension")
         if self.collect_tags is not None and tag not in self.collect_tags:
             self.collect_tags.append(tag)
 
@@ -273,7 +298,8 @@ class Ctx:
         The estimator config is resolved per fully-prefixed tag through
         ``Policy.config_for`` (per-layer rules + budget schedules)."""
         tag = self.tag_prefix + tag
-        self._record_tag(tag)
+        self._record_tag(tag, SAMPLED_DIM_TOKEN if h.ndim >= 3
+                         else SAMPLED_DIM_ROWS)
         cfg = self.policy.config_for(tag)
         if self.compute_dtype is not None:
             w = w.astype(self.compute_dtype)
@@ -296,7 +322,8 @@ class Ctx:
         weight falls back to its own independent linear."""
         full_tags = [self.tag_prefix + t for t in tags]
         for tag in full_tags:
-            self._record_tag(tag)
+            self._record_tag(tag, SAMPLED_DIM_TOKEN if h.ndim >= 3
+                             else SAMPLED_DIM_ROWS)
         cfgs = [self.policy.config_for(t) for t in full_tags]
         if self.compute_dtype is not None:
             ws = [w.astype(self.compute_dtype) for w in ws]

@@ -38,21 +38,31 @@ from repro.models import registry
 
 def collect_linear_tags(cfg, policy: Optional[cm.Policy] = None
                         ) -> List[str]:
-    """All WTA-CRS-able linear tags of an architecture, in trace order.
+    """Cache-eligible linear tags of an architecture, in trace order.
+
+    Only tags that sample over the TOKEN dim are returned: the cache is
+    keyed per dataset sample, so a tag whose plan runs over flattened
+    rows (the MoE router over batch*seq) or expert-capacity slots has no
+    per-sample tap to store — including it used to silently corrupt the
+    scatter.  The sampled dimension is explicit trace metadata now
+    (``cm.tag_recorder().dims``); anything non-token is excluded here
+    and ``scatter`` asserts the shapes of what remains.
 
     ``policy``: optional per-layer policy; tags whose resolved estimator
     is EXACT (at every schedule phase: kind, not budget, decides) are
-    dropped, so the znorm cache only tracks linears that can sample.
+    also dropped, so the znorm cache only tracks linears that can sample.
     """
     trace_policy = cm.Policy(wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS,
                                                  budget=0.5, min_rows=1))
     batch = registry.train_batch_specs(cfg, 2, 2 * len(cfg.pattern) * 4)
-    with cm.tag_recorder() as tags:
+    rec = cm.tag_recorder()
+    with rec as tags:
         jax.eval_shape(
             lambda p, b: registry.loss_fn(cfg, p, b, trace_policy,
                                           key=jax.random.PRNGKey(0))[0],
             registry.abstract_params(cfg)[0], batch)
-    out = list(tags)
+    out = [t for t in tags
+           if rec.dims.get(t) == cm.SAMPLED_DIM_TOKEN]
     if policy is not None:
         out = [t for t in out if not policy.config_for(t).is_exact]
     return out
@@ -80,8 +90,9 @@ def sampling_active_tags(policy: cm.Policy, tags,
     (min_rows floors small sequences into the exact path even at
     budget < 1).  Pass the batch token length as ``seq_len`` to apply
     the full condition; without it only ``budget < 1.0`` is checked.
-    Cache tags all come from token-dim linears (the tag recorder runs
-    over ``Ctx.linear``), so the batch seq is the right S for them.
+    Cache tags are guaranteed token-dim samplers — collect_linear_tags
+    filters on the recorded sampled-dim metadata — so the batch seq is
+    the right S for every one of them.
     """
     out = []
     for t in tags:
@@ -114,5 +125,12 @@ def scatter(cache: Dict[str, jax.Array], sample_ids: jax.Array,
             out[t] = c
             continue
         z = jnp.sqrt(jnp.maximum(tap_grads[t], 0.0))        # (R, B)
+        want = (c.shape[0], len(sample_ids))
+        if z.shape != want:
+            raise ValueError(
+                f"znorm tap for tag {t!r} has shape {z.shape}, cache "
+                f"scatter expects (n_repeats, batch) == {want}; this tag "
+                f"does not sample per dataset sample over the token dim "
+                f"(see collect_linear_tags) and cannot live in the cache")
         out[t] = c.at[:, sample_ids].set(z.astype(c.dtype))
     return out

@@ -87,6 +87,43 @@ def test_sampled_matmul_property(k, di, do, n, seed):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.kernel
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,k,di,do,n", [
+    (1, 16, 32, 24, 64),        # degenerate batch, aligned blocks
+    (2, 20, 130, 70, 50),       # ragged last block in every dim
+    (8, 12, 33, 17, 30),        # larger batch, ragged + tiny dims
+])
+def test_sampled_matmul_batched(b, k, di, do, n, dtype):
+    """Batched kernel == sum_b of the per-sample oracle, across B, dtype
+    and ragged-last-block shapes (interpret mode on CPU)."""
+    hs = jnp.asarray(RNG.randn(b, k, di), dtype)
+    dz = jnp.asarray(RNG.randn(b, n, do), dtype)
+    idx = jnp.asarray(RNG.randint(0, n, (b, k)), jnp.int32)
+    scale = jnp.asarray(RNG.rand(b, k), jnp.float32)
+    got = ops.sampled_matmul(hs, dz, idx, scale, bm=16, bn=16, bk=8)
+    want = ref.sampled_matmul_batched_ref(hs, dz, idx, scale)
+    tol = dict(rtol=3e-2, atol=3e-1 * b) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4 * b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+@pytest.mark.kernel
+def test_sampled_matmul_batched_matches_stacked_single():
+    """The batch-summed kernel equals B independent single-sample kernel
+    calls summed — the B == 1 path is exactly the degenerate case."""
+    b, k, di, do, n = 3, 16, 32, 24, 40
+    hs = jnp.asarray(RNG.randn(b, k, di), jnp.float32)
+    dz = jnp.asarray(RNG.randn(b, n, do), jnp.float32)
+    idx = jnp.asarray(RNG.randint(0, n, (b, k)), jnp.int32)
+    scale = jnp.asarray(RNG.rand(b, k), jnp.float32)
+    got = ops.sampled_matmul(hs, dz, idx, scale, bm=16, bn=16, bk=8)
+    want = sum(np.asarray(ops.sampled_matmul(hs[i], dz[i], idx[i], scale[i],
+                                             bm=16, bn=16, bk=8))
+               for i in range(b))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
 def test_sampled_matmul_matches_linear_backward():
     """Kernel computes exactly the dW the custom_vjp produces."""
     from repro.core.config import WTACRSConfig
@@ -105,14 +142,16 @@ def test_sampled_matmul_matches_linear_backward():
                                rtol=1e-4, atol=1e-4)
 
 
-def test_shared_backward_routes_through_kernel():
+@pytest.mark.kernel
+@pytest.mark.parametrize("batch", [1, 2, 8])
+def test_shared_backward_routes_through_kernel(batch):
     """use_kernel=True must produce the same shared-plan dW gradients as
-    the jnp dot_general path for the single-sample (B == 1) case."""
+    the jnp dot_general path for every batch size."""
     from repro.core.config import WTACRSConfig
     from repro.core.linear import wtacrs_linear_shared
 
     rng = np.random.RandomState(11)
-    h = jnp.asarray(rng.randn(1, 64, 32), jnp.float32)
+    h = jnp.asarray(rng.randn(batch, 64, 32), jnp.float32)
     w1 = jnp.asarray(rng.randn(32, 24) * 0.1, jnp.float32)
     w2 = jnp.asarray(rng.randn(32, 16) * 0.1, jnp.float32)
     key = jax.random.PRNGKey(5)

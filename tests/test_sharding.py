@@ -14,8 +14,7 @@ def mesh16():
     """A 4x4 stand-in mesh with the production axis names (the real
     16x16 needs 256 host devices; rules only read axis sizes)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return mesh_lib.make_mesh((n, 1), ("data", "model"))
 
 
 class FakeMesh:

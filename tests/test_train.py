@@ -12,7 +12,7 @@ from repro.core.config import EstimatorKind, WTACRSConfig
 from repro.models import common as cm
 from repro.models import registry
 from repro.train import checkpoint, compression, data, optim, znorm
-from repro.launch import train_steps
+from repro.launch import mesh as mesh_lib, train_steps
 
 KEY = jax.random.PRNGKey(0)
 
@@ -119,8 +119,7 @@ class TestMicrobatching:
 
 class TestCompression:
     def test_int8_quantization_roundtrip_error_bounded(self):
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = mesh_lib.make_mesh((1,), ("data",))
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
@@ -136,8 +135,7 @@ class TestCompression:
         assert err <= scale * 0.51 + 1e-6
 
     def test_bf16_mode(self):
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = mesh_lib.make_mesh((1,), ("data",))
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
