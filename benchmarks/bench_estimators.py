@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import emit, time_jit
 from repro.configs import get_config
 from repro.core import (column_row_probabilities, crs_variance,
@@ -36,7 +37,7 @@ def _finetuned_model():
         cfg, cm.Policy(), optim.AdamWConfig(),
         optim.linear_warmup_constant(3e-3, warmup=5)))
     it = ds.epoch(8)
-    for s in range(25):
+    for s in range(common.smoke_or(6, 25)):
         try:
             b = next(it)
         except StopIteration:
@@ -76,7 +77,7 @@ def run():
         argnums=1, has_aux=True)(params, znorms)
 
     holds, total, masses = 0, 0, []
-    for t in tags[:6]:
+    for t in tags[:common.smoke_or(2, 6)]:
         zsq = np.asarray(gz[t])                     # (R, B, S) squared
         for r in range(zsq.shape[0]):
             for bi in range(min(2, b)):
@@ -102,13 +103,14 @@ def run():
     x = x * jax.random.permutation(jax.random.fold_in(key, 1),
                                    zipf * 256 / jnp.sum(zipf))[None, :]
     y = jax.random.normal(jax.random.fold_in(key, 2), (256, 64))
+    trials = common.smoke_or(200, 1500)
     for budget in (0.3, 0.1):
         _, v_crs = empirical_estimator_stats(
             x, y, WTACRSConfig(kind=EstimatorKind.CRS, budget=budget),
-            jax.random.PRNGKey(4), 1500)
+            jax.random.PRNGKey(4), trials)
         _, v_wta = empirical_estimator_stats(
             x, y, WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=budget),
-            jax.random.PRNGKey(5), 1500)
+            jax.random.PRNGKey(5), trials)
         emit(f"thm2_variance_ratio@{budget}", 0.0,
              f"var_wta/var_crs={float(v_wta / v_crs):.3f}")
 
@@ -122,13 +124,13 @@ def run():
     # (incl. ones added outside core, e.g. stratified_crs) vs CRS at 0.3
     _, v_ref = empirical_estimator_stats(
         x, y, WTACRSConfig(kind="crs", budget=0.3),
-        jax.random.PRNGKey(6), 1500)
+        jax.random.PRNGKey(6), trials)
     for name, spec in sorted(registered_estimators().items()):
         if spec.biased:
             continue
         _, v = empirical_estimator_stats(
             x, y, WTACRSConfig(kind=name, budget=0.3),
-            jax.random.PRNGKey(6), 1500)
+            jax.random.PRNGKey(6), trials)
         emit(f"registry_variance_vs_crs@{name}", 0.0,
              f"var/var_crs={float(v / v_ref):.3f}")
 
@@ -139,7 +141,8 @@ def run():
     # entry is the Table-3 overhead measurement at a realistic batch.
     from repro.kernels import ops as kernel_ops
     from repro.kernels import ref as kernel_ref
-    kb, kn, kdi, kdo, kk = 8, 256, 256, 256, 77
+    kb, kn, kdi, kdo, kk = common.smoke_or((2, 64, 64, 64, 17),
+                                           (8, 256, 256, 256, 77))
     bkey = jax.random.PRNGKey(7)
     hs = jax.random.normal(bkey, (kb, kk, kdi))
     dzb = jax.random.normal(jax.random.fold_in(bkey, 1), (kb, kn, kdo))

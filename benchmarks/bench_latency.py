@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, time_jit
 from repro.core.config import EstimatorKind, WTACRSConfig
 from repro.core.linear import wtacrs_linear
@@ -19,8 +20,9 @@ from repro.core.linear import wtacrs_linear
 
 def run():
     key = jax.random.PRNGKey(0)
-    h = jax.random.normal(key, (8, 256, 512), jnp.float32)
-    w = jax.random.normal(jax.random.fold_in(key, 1), (512, 512),
+    b, s, d = common.smoke_or((2, 64, 128), (8, 256, 512))
+    h = jax.random.normal(key, (b, s, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, d),
                           jnp.float32)
 
     def make(policy_cfg):
@@ -41,10 +43,11 @@ def run():
 
     # Pallas kernels (interpret mode -- correctness path visibility only)
     from repro.kernels import ops
-    x = jax.random.normal(key, (512, 512), jnp.float32)
+    n = common.smoke_or(128, 512)
+    x = jax.random.normal(key, (n, n), jnp.float32)
     t = time_jit(lambda: ops.row_norms(x, block_rows=128, block_d=128))
     emit("kernel_row_norms_interp", t, "interpret-mode (not perf)")
-    idx = jnp.arange(128, dtype=jnp.int32)
-    sc = jnp.ones((128,), jnp.float32)
+    idx = jnp.arange(n // 4, dtype=jnp.int32)
+    sc = jnp.ones((n // 4,), jnp.float32)
     t = time_jit(lambda: ops.gather_scale(x, idx, sc, block_d=128))
     emit("kernel_gather_scale_interp", t, "interpret-mode (not perf)")

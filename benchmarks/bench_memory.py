@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax._src.ad_checkpoint import saved_residuals
 
+from benchmarks import common
 from benchmarks.common import emit
 from repro.configs import get_config
 from repro.core.config import EstimatorKind, WTACRSConfig
@@ -53,7 +54,9 @@ def policies():
 def run():
     cfg = get_config("qwen2.5-3b", reduced=True)
     params, _ = registry.init_params(cfg, jax.random.PRNGKey(0))
-    batch = registry.make_synthetic_batch(cfg, 4, 128, jax.random.PRNGKey(1))
+    bsz, seq = common.smoke_or((2, 32), (4, 128))
+    batch = registry.make_synthetic_batch(cfg, bsz, seq,
+                                          jax.random.PRNGKey(1))
 
     base = None
     results = {}
@@ -67,8 +70,8 @@ def run():
 
     # Fig. 6: max batch under a fixed activation budget (activations scale
     # linearly in batch; params/optimizer excluded as in the paper's plot)
-    budget = 8 * base   # pretend the device fits 8x the full-policy batch-4
+    budget = 8 * base   # pretend the device fits 8x the full-policy batch
     for name, b in results.items():
-        per_sample = b / 4
+        per_sample = b / bsz
         emit(f"fig6_max_batch[{name}]", 0.0,
              f"max_batch={int(budget / per_sample)}")

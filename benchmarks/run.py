@@ -1,18 +1,29 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes ``BENCH_*.json``
+artifacts (per-module payloads plus a ``BENCH_summary.json`` of every
+row).  ``--smoke`` runs the CI-sized variant: same code paths, reduced
+shapes/steps, hard-failing on any exception so the bench-smoke job
+gates regressions.
 
   bench_estimators  -- Fig. 3 (Eq. 7 condition), Theorem 2 variance
   bench_memory      -- Table 2 (activation memory), Fig. 6 (max batch)
   bench_convergence -- Table 1 (accuracy), Fig. 7 (budget), Fig. 8
-                       (estimator ablation)
+                       (estimator ablation), fixed-vs-adaptive budgets
   bench_latency     -- Table 3 (linear fwd/bwd latency)
   bench_roofline    -- roofline terms per (arch x shape x mesh) cell
 """
 import argparse
 import importlib
+import os
 import sys
 import traceback
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; the intra-package `benchmarks.*` imports need the root.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 MODULES = ["bench_estimators", "bench_memory", "bench_convergence",
            "bench_latency", "bench_roofline"]
@@ -22,21 +33,36 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module suffixes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: reduced shapes/steps, same paths")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_*.json artifacts")
     args = ap.parse_args()
+
+    from benchmarks import common
+    common.set_smoke(args.smoke)
+    common.set_out_dir(args.out_dir)
+
     mods = MODULES
     if args.only:
         keep = args.only.split(",")
         mods = [m for m in MODULES if any(k in m for k in keep)]
     print("name,us_per_call,derived")
-    failed = 0
+    errors = {}
     for m in mods:
         try:
             importlib.import_module(f"benchmarks.{m}").run()
         except Exception:
-            failed += 1
+            errors[m] = traceback.format_exc()
             print(f"{m},0.0,ERROR")
             traceback.print_exc(file=sys.stderr)
-    if failed:
+    common.emit_json("summary", {
+        "smoke": args.smoke,
+        "modules": mods,
+        "rows": common.RESULTS,
+        "errors": errors,
+    })
+    if errors:
         sys.exit(1)
 
 

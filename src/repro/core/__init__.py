@@ -22,6 +22,8 @@ from repro.core.linear import (wtacrs_linear, wtacrs_linear_shared,
                                read_grad_norm_tap)
 from repro.core.lora import LoRAConfig, init_lora_params, lora_linear
 from repro.core.policy import BudgetSchedule, PolicyRules, Rule
+from repro.core.controller import (BudgetController, ConditionRate,
+                                   ESSProportional, FixedSchedule, TagStats)
 
 __all__ = [
     "EstimatorKind", "NormSource", "WTACRSConfig", "EXACT_CONFIG",
@@ -35,4 +37,6 @@ __all__ = [
     "wtacrs_linear", "wtacrs_linear_shared", "read_grad_norm_tap",
     "LoRAConfig", "init_lora_params", "lora_linear",
     "BudgetSchedule", "PolicyRules", "Rule",
+    "BudgetController", "ConditionRate", "ESSProportional", "FixedSchedule",
+    "TagStats",
 ]

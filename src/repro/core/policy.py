@@ -110,18 +110,37 @@ class Rule:
     fallback.  ``overrides``: sorted tuple of (field, value) pairs
     applied on top (use :meth:`Rule.of` to pass a dict).  ``schedule``:
     optional BudgetSchedule replacing the config's static budget.
+    ``controller``: optional adaptive budget controller
+    (``repro.core.controller.BudgetController``) replacing the budget
+    with a statistics-driven one — mutually exclusive with ``schedule``.
+    A controller needs a driver that feeds it znorm statistics and pins
+    the decided budget per compile
+    (``launch.train_steps.make_scheduled_train_step``); undriven, the
+    rule resolves to the controller's initial budget.
     """
 
     pattern: str
     config: Optional[WTACRSConfig] = None
     overrides: Tuple[Tuple[str, object], ...] = ()
     schedule: Optional[BudgetSchedule] = None
+    controller: Optional[object] = None    # BudgetController (duck-typed)
+
+    def __post_init__(self):
+        if self.schedule is not None and self.controller is not None:
+            raise ValueError(
+                f"rule {self.pattern!r}: schedule and controller are "
+                f"mutually exclusive (a controller already owns the "
+                f"budget trajectory; wrap the schedule in "
+                f"controller.FixedSchedule to mix)")
 
     @classmethod
     def of(cls, pattern: str,
            config: Union[WTACRSConfig, dict, None] = None,
-           schedule: Optional[BudgetSchedule] = None) -> "Rule":
-        """``config`` may be a WTACRSConfig or an override dict."""
+           schedule: Optional[BudgetSchedule] = None,
+           controller: Optional[object] = None) -> "Rule":
+        """``config`` may be a WTACRSConfig or an override dict; the
+        third positional slot accepts either a BudgetSchedule or a
+        BudgetController (they are distinguished by type)."""
         overrides: Tuple[Tuple[str, object], ...] = ()
         if isinstance(config, dict):
             bad = set(config) - _OVERRIDE_FIELDS
@@ -129,19 +148,41 @@ class Rule:
                 raise ValueError(f"unknown WTACRSConfig fields {sorted(bad)}")
             overrides = tuple(sorted(config.items()))
             config = None
+        if schedule is not None and not isinstance(schedule, BudgetSchedule):
+            if controller is not None:
+                raise ValueError("pass either a schedule or a controller")
+            schedule, controller = None, schedule
+        if controller is not None and not hasattr(controller, "propose"):
+            raise TypeError(f"controller {controller!r} does not implement "
+                            f"the BudgetController protocol")
         return cls(pattern=pattern, config=config, overrides=overrides,
-                   schedule=schedule)
+                   schedule=schedule, controller=controller)
 
     def matches(self, tag: str) -> bool:
         return fnmatch.fnmatchcase(tag, self.pattern)
 
-    def resolve(self, fallback: WTACRSConfig, step: int) -> WTACRSConfig:
+    def static_budget(self, fallback: WTACRSConfig) -> Optional[float]:
+        """The rule's config budget before any schedule/controller."""
         cfg = self.config if self.config is not None else fallback
         if self.overrides:
             cfg = dataclasses.replace(cfg, **dict(self.overrides))
-        if self.schedule is not None:
+        return cfg.budget
+
+    def resolve(self, fallback: WTACRSConfig, step: int,
+                budget: Optional[float] = None) -> WTACRSConfig:
+        """``budget``: driver-pinned value (from a controller decision)
+        overriding both the static budget and any schedule."""
+        cfg = self.config if self.config is not None else fallback
+        if self.overrides:
+            cfg = dataclasses.replace(cfg, **dict(self.overrides))
+        if budget is not None:
+            cfg = dataclasses.replace(cfg, budget=float(budget))
+        elif self.schedule is not None:
             cfg = dataclasses.replace(
                 cfg, budget=self.schedule.budget_at(step))
+        elif self.controller is not None:
+            cfg = dataclasses.replace(
+                cfg, budget=self.controller.initial_budget(cfg.budget))
         return cfg
 
 
@@ -165,18 +206,49 @@ class PolicyRules:
         return cls(rules=tuple(built), default=default)
 
     def resolve(self, tag: str, step: int = 0,
-                fallback: Optional[WTACRSConfig] = None) -> WTACRSConfig:
+                fallback: Optional[WTACRSConfig] = None,
+                rule_budgets: Optional[Tuple[Optional[float], ...]] = None
+                ) -> WTACRSConfig:
+        """``rule_budgets``: optional per-rule pinned budgets (aligned
+        with ``self.rules``, ``None`` = not pinned), set by a driver
+        that resolves controllers against live statistics."""
         base = self.default if self.default is not None else fallback
         if base is None:
             base = WTACRSConfig(kind=EstimatorKind.EXACT)
-        for rule in self.rules:
+        for i, rule in enumerate(self.rules):
             if rule.matches(tag):
-                return rule.resolve(base, step)
+                pinned = (rule_budgets[i] if rule_budgets is not None
+                          else None)
+                return rule.resolve(base, step, budget=pinned)
         return base
 
-    def schedule_signature(self, step: int) -> Tuple[float, ...]:
-        """Resolved budget per scheduled rule — the jit-cache key for a
-        step-scheduled trainer (changes exactly when a recompile is
-        needed; empty when no rule carries a schedule)."""
-        return tuple(r.schedule.budget_at(step) for r in self.rules
-                     if r.schedule is not None)
+    def dynamic_rule_indices(self) -> Tuple[int, ...]:
+        """Indices of rules whose budget can change over training."""
+        return tuple(i for i, r in enumerate(self.rules)
+                     if r.schedule is not None or r.controller is not None)
+
+    def controller_rule_indices(self) -> Tuple[int, ...]:
+        return tuple(i for i, r in enumerate(self.rules)
+                     if r.controller is not None)
+
+    def schedule_signature(self, step: int,
+                           rule_budgets: Optional[Tuple] = None,
+                           fallback: Optional[WTACRSConfig] = None
+                           ) -> Tuple[float, ...]:
+        """Resolved budget per schedule- or controller-carrying rule —
+        the jit-cache key for a step-scheduled trainer (changes exactly
+        when a recompile is needed; empty when every rule is static)."""
+        base = self.default if self.default is not None else fallback
+        if base is None:
+            base = WTACRSConfig(kind=EstimatorKind.EXACT)
+        sig = []
+        for i in self.dynamic_rule_indices():
+            r = self.rules[i]
+            if rule_budgets is not None and rule_budgets[i] is not None:
+                sig.append(float(rule_budgets[i]))
+            elif r.schedule is not None:
+                sig.append(r.schedule.budget_at(step))
+            else:
+                sig.append(r.controller.initial_budget(
+                    r.static_budget(base)))
+        return tuple(sig)

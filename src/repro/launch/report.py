@@ -1,5 +1,7 @@
 """Generate the EXPERIMENTS.md §Dry-run + §Roofline sections from the
-dry-run artifacts.  §Perf is maintained by hand (the iteration log)."""
+dry-run artifacts, plus the §Budgets trajectory report for adaptive
+budget-controller runs.  §Perf is maintained by hand (the iteration
+log)."""
 from __future__ import annotations
 
 import json
@@ -31,6 +33,44 @@ def dryrun_table(rows: List[dict]) -> str:
             f"| {r['collectives']['total_bytes']:.3g} "
             f"| {cc} | {r['compile_s']} |")
     return hdr + "\n".join(out) + "\n"
+
+
+def budget_trajectory_table(records: List[dict]) -> str:
+    """Markdown table over ``step_fn.budget_trajectory`` records (or the
+    same records round-tripped through the benchmark JSON).  Initial
+    pins (``prev is None``) render as `init`."""
+    hdr = ("| step | rule | pattern | budget | prev |\n"
+           "|---|---|---|---|---|\n")
+    out = []
+    for r in records:
+        prev = "init" if r.get("prev") is None else f"{r['prev']:.3g}"
+        out.append(f"| {r['step']} | {r['rule']} | `{r['pattern']}` "
+                   f"| {r['budget']:.3g} | {prev} |")
+    return hdr + "\n".join(out) + ("\n" if out else "")
+
+
+def budget_report(records: List[dict], n_steps: int,
+                  n_compiles: int) -> str:
+    """§Budgets section: the controller trajectory of one training run
+    plus the re-plan economy (changes vs. steps vs. compiled variants —
+    steady-state steps must reuse the compiled step)."""
+    changes = [r for r in records if r.get("prev") is not None]
+    parts = ["## §Budgets\n"]
+    parts.append(
+        f"{len(changes)} controller re-plans over {n_steps} steps "
+        f"({n_compiles} compiled step variants; "
+        f"{n_steps - len(changes)} steps reused a cached step).\n")
+    if records:
+        parts.append(budget_trajectory_table(records))
+    else:
+        parts.append("No controller-carrying rules (static budgets).\n")
+    return "\n".join(parts)
+
+
+def budget_report_from_step_fn(step_fn, n_steps: int) -> str:
+    """Convenience wrapper over a ``make_scheduled_train_step`` result."""
+    return budget_report(step_fn.budget_trajectory, n_steps,
+                         len(step_fn.compiled))
 
 
 def generate(dryrun_dir: str = "experiments/dryrun") -> str:

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core import controller as controller_lib
 from repro.models import common as cm
 from repro.models import registry
 from repro.train import compression, optim, znorm
@@ -24,7 +25,11 @@ from repro.launch import sharding as shard_lib
 
 
 def init_train_state(cfg: ArchConfig, key: jax.Array,
-                     znorm_tags=None, n_dataset: int = 0) -> Dict[str, Any]:
+                     znorm_tags=None, n_dataset: int = 0,
+                     budget_stats: bool = False) -> Dict[str, Any]:
+    """``budget_stats``: also track the per-tag controller statistics
+    (only useful — and only paid for — when the policy carries adaptive
+    budget controllers; see ``repro.core.controller``)."""
     params, _ = registry.init_params(cfg, key)
     state = {
         "params": params,
@@ -34,11 +39,13 @@ def init_train_state(cfg: ArchConfig, key: jax.Array,
     }
     if znorm_tags:
         state["znorm"] = znorm.init_cache(cfg, znorm_tags, n_dataset)
+        if budget_stats:
+            state["budget_stats"] = znorm.init_stats(znorm_tags)
     return state
 
 
 def abstract_train_state(cfg: ArchConfig, znorm_tags=None,
-                         n_dataset: int = 0):
+                         n_dataset: int = 0, budget_stats: bool = False):
     """(ShapeDtypeStructs, logical axes info) without allocation."""
     params, axes = registry.abstract_params(cfg)
     opt = jax.eval_shape(optim.adamw_init, params)
@@ -52,6 +59,10 @@ def abstract_train_state(cfg: ArchConfig, znorm_tags=None,
         state["znorm"] = {
             t: jax.ShapeDtypeStruct((cfg.n_repeats, n_dataset), jnp.float32)
             for t in znorm_tags}
+        if budget_stats:
+            state["budget_stats"] = {
+                t: jax.ShapeDtypeStruct((znorm.N_STATS,), jnp.float32)
+                for t in znorm_tags}
     return state, axes
 
 
@@ -69,6 +80,8 @@ def train_state_shardings(cfg, state, axes, mesh):
     }
     if "znorm" in state:
         sh["znorm"] = {t: rep for t in state["znorm"]}
+    if "budget_stats" in state:
+        sh["budget_stats"] = {t: rep for t in state["budget_stats"]}
     return sh
 
 
@@ -179,6 +192,14 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
             new_state["znorm"] = znorm.scatter(
                 state["znorm"], batch["sample_ids"], gz,
                 active_tags=active)
+            if "budget_stats" in state:
+                # resolved budgets are static per compile, like the
+                # shapes they produce
+                budgets = {t: policy.config_for(t).budget
+                           for t in state["budget_stats"]}
+                new_state["budget_stats"] = znorm.update_stats(
+                    state["budget_stats"], gz, budgets,
+                    active_tags=active)
         metrics = {"loss": loss, "lr": lr, **om}
         return new_state, metrics
 
@@ -190,8 +211,8 @@ def make_scheduled_train_step(cfg: ArchConfig, policy: cm.Policy,
                               schedule: Callable[[jax.Array], jax.Array],
                               jit: bool = True,
                               **train_step_kwargs):
-    """(state, batch) -> (state, metrics) with budget schedules resolved
-    against the live step counter.
+    """(state, batch) -> (state, metrics) with budget schedules AND
+    adaptive budget controllers resolved against the live step counter.
 
     Sampling budgets fix static residual shapes, so a schedule cannot be
     traced — instead the policy is re-resolved at the CONCRETE step read
@@ -200,12 +221,98 @@ def make_scheduled_train_step(cfg: ArchConfig, policy: cm.Policy,
     schedule signature.  Piecewise-constant schedules therefore bound
     the number of recompiles by their plateau count; schedule-free
     policies compile exactly once.
+
+    Controller-carrying rules (``Rule.controller``, see
+    ``repro.core.controller``) additionally read the per-tag statistics
+    the cached step accumulates in ``state["budget_stats"]`` (one more
+    host device_get per step, a few floats per tag — the same cost class
+    as the step counter).  A controller's decision is pinned into the
+    policy via ``with_rule_budgets`` so the compiled step sees a plain
+    static budget; re-planning (a new signature -> ``plans.build_plan``
+    shapes change -> compile) happens exactly when a controller crosses
+    its hysteresis band.  Introspection attributes:
+
+      * ``step_fn.compiled``           — signature -> compiled step
+      * ``step_fn.replans``            — controller-driven budget changes
+      * ``step_fn.budget_trajectory``  — [{step, rule, budget, prev}, ...]
+        (initial pins carry ``prev=None`` and do not count as re-plans)
     """
     compiled: Dict[tuple, Callable] = {}
+    rules = policy.rules.rules if policy.rules is not None else ()
+    ctrl_idx = (policy.rules.controller_rule_indices()
+                if policy.rules is not None else ())
+    # same default-first base config as PolicyRules.resolve/signature
+    base_cfg = (policy.rules.default
+                if policy.rules is not None
+                and policy.rules.default is not None else policy.wtacrs)
+    current: Dict[int, float] = {
+        i: rules[i].controller.initial_budget(
+            rules[i].static_budget(base_cfg))
+        for i in ctrl_idx}
+    stats_needed = any(getattr(rules[i].controller, "needs_stats", True)
+                       for i in ctrl_idx)
+    if stats_needed and not train_step_kwargs.get("use_znorm_cache"):
+        # without the cache the tap never refreshes budget_stats: every
+        # count stays 0, controllers hold forever, and the "adaptive"
+        # run silently trains at its initial budget — fail loudly now
+        raise ValueError(
+            "policy has stats-driven budget-controller rules; pass "
+            "use_znorm_cache=True (and init the state with znorm_tags "
+            "and budget_stats=True) so the tap statistics they feed on "
+            "actually update")
+    # tags GOVERNED by each controller rule under first-match-wins —
+    # a bare pattern match would also feed a controller stats from tags
+    # an earlier rule owns.  Stat keys are fixed per state structure, so
+    # resolve once.
+    owned_tags: Dict[int, list] = {}
+
+    def _owned(stats_keys):
+        if not owned_tags:
+            owned_tags.update({i: [] for i in ctrl_idx})
+            for t in stats_keys:
+                for i, r in enumerate(rules):
+                    if r.matches(t):
+                        if i in owned_tags:
+                            owned_tags[i].append(t)
+                        break
+        return owned_tags
 
     def step_fn(state, batch):
         step = int(state["step"])
+        rule_budgets = None
+        if ctrl_idx:
+            if stats_needed and "budget_stats" not in state:
+                raise ValueError(
+                    "policy has stats-driven budget-controller rules "
+                    "but the train state carries no 'budget_stats'; "
+                    "init the state with znorm_tags and "
+                    "budget_stats=True (the controllers feed on the "
+                    "znorm cache's tap statistics) and pass "
+                    "use_znorm_cache=True")
+            stats_host = (jax.device_get(state["budget_stats"])
+                          if "budget_stats" in state else {})
+            owned = _owned(stats_host.keys())
+            for i in ctrl_idx:
+                r = rules[i]
+                agg = controller_lib.TagStats.aggregate(stats_host,
+                                                        tags=owned[i])
+                nb = float(r.controller.propose(agg, current[i], step))
+                if step == 0 and not any(
+                        rec["rule"] == i
+                        for rec in step_fn.budget_trajectory):
+                    step_fn.budget_trajectory.append(
+                        {"step": 0, "rule": i, "pattern": r.pattern,
+                         "budget": current[i], "prev": None})
+                if nb != current[i]:
+                    step_fn.replans += 1
+                    step_fn.budget_trajectory.append(
+                        {"step": step, "rule": i, "pattern": r.pattern,
+                         "budget": nb, "prev": current[i]})
+                    current[i] = nb
+            rule_budgets = tuple(current.get(i) for i in range(len(rules)))
         pol = policy.at_step(step)
+        if rule_budgets is not None:
+            pol = pol.with_rule_budgets(rule_budgets)
         sig = pol.schedule_signature()
         fn = compiled.get(sig)
         if fn is None:
@@ -217,6 +324,9 @@ def make_scheduled_train_step(cfg: ArchConfig, policy: cm.Policy,
         return fn(state, batch)
 
     step_fn.compiled = compiled     # introspection: one entry per plateau
+    step_fn.replans = 0
+    step_fn.budget_trajectory = []
+    step_fn.owned_tags = owned_tags  # rule idx -> stat tags it governs
     return step_fn
 
 

@@ -172,12 +172,17 @@ class Policy:
     projections can stay exact while MLPs sample aggressively.  ``step``
     is the concrete trainer step the rules' budget schedules resolve
     against (static per compilation: budgets fix residual shapes; see
-    ``launch.train_steps.make_scheduled_train_step``).
+    ``launch.train_steps.make_scheduled_train_step``).  ``rule_budgets``
+    pins one budget per rule (aligned with ``rules.rules``, ``None`` =
+    unpinned): the scheduled-step driver resolves controller-carrying
+    rules against live znorm statistics and bakes the decision in here,
+    so the compiled step sees a plain static budget.
     """
     wtacrs: WTACRSConfig = WTACRSConfig(kind=EstimatorKind.EXACT)
     lora: LoRAConfig = LoRAConfig()
     rules: Optional[PolicyRules] = None
     step: int = 0
+    rule_budgets: Optional[Tuple[Optional[float], ...]] = None
     remat: str = "none"            # none | full | wtacrs_names
     flash_block: int = 512
     flash_mode: str = "full"       # full | triangular (perf-iterated)
@@ -194,18 +199,27 @@ class Policy:
         if self.rules is None:
             return self.wtacrs
         return self.rules.resolve(tag, step=self.step,
-                                  fallback=self.wtacrs)
+                                  fallback=self.wtacrs,
+                                  rule_budgets=self.rule_budgets)
 
     def at_step(self, step: int) -> "Policy":
         """Resolve budget schedules against a concrete trainer step."""
         return dataclasses.replace(self, step=int(step))
 
+    def with_rule_budgets(self, budgets) -> "Policy":
+        """Pin per-rule budgets (driver-resolved controller decisions)."""
+        budgets = None if budgets is None else tuple(budgets)
+        return dataclasses.replace(self, rule_budgets=budgets)
+
     def schedule_signature(self) -> Tuple[float, ...]:
         """Jit-cache key: changes exactly when a schedule crosses a
-        plateau boundary (empty for schedule-free policies)."""
+        plateau boundary or a controller decision re-pins a budget
+        (empty for static policies)."""
         if self.rules is None:
             return ()
-        return self.rules.schedule_signature(self.step)
+        return self.rules.schedule_signature(self.step,
+                                             rule_budgets=self.rule_budgets,
+                                             fallback=self.wtacrs)
 
 
 def _tag_seed(tag: str) -> int:

@@ -31,9 +31,12 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import plans
 from repro.core.config import EstimatorKind, WTACRSConfig
 from repro.models import common as cm
 from repro.models import registry
+
+_EPS = 1e-20
 
 
 def collect_linear_tags(cfg, policy: Optional[cm.Policy] = None
@@ -133,4 +136,88 @@ def scatter(cache: Dict[str, jax.Array], sample_ids: jax.Array,
                 f"does not sample per dataset sample over the token dim "
                 f"(see collect_linear_tags) and cannot live in the cache")
         out[t] = c.at[:, sample_ids].set(z.astype(c.dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Online per-tag statistics for adaptive budget controllers
+# ---------------------------------------------------------------------------
+#
+# One (N_STATS,) f32 vector per cache tag, EMA-updated from the same tap
+# the scatter consumes, and read CONCRETELY on the host by the
+# scheduled-step driver (repro.core.controller maps them to budgets).
+# Masking semantics are identical to ``scatter`` by construction: the
+# update iterates the stats dict (whose keys come from
+# ``collect_linear_tags`` — token-dim, non-exact tags only), holds
+# inactive tags, and never reads taps that are not cache keys.  A
+# rows-dim tag (e.g. the MoE router over batch*seq) therefore cannot
+# contribute statistics any more than it can reach the cache.
+
+N_STATS = 4
+STAT_ESS = 0      # effective-sample-size fraction (Σz)² / (n·Σz²)
+STAT_COND = 1     # Theorem-2 condition rate (EMA of the Eq. 7 indicator)
+STAT_UTIL = 2     # budget utilization: top-k probability mass at budget
+STAT_COUNT = 3    # number of EMA updates absorbed
+STATS_DECAY = 0.8
+
+
+def init_stats(tags) -> Dict[str, jax.Array]:
+    """Neutral init (uniform-looking, zero count): controllers hold
+    until ``STAT_COUNT`` clears their warmup, and the first genuine
+    update overwrites these values outright (see ``update_stats``)."""
+    base = jnp.zeros((N_STATS,), jnp.float32)
+    base = base.at[STAT_ESS].set(1.0).at[STAT_UTIL].set(1.0)
+    return {t: base for t in tags}
+
+
+def _stat_vector(tap_sq: jax.Array, budget: float) -> jax.Array:
+    """(ess, cond, util) from one tag's squared-norm tap (R, B).
+
+    The atoms are the batch's per-(repeat, sample) gradient norms — the
+    same z that lands in the cache — and ``k = round(budget * n)`` plays
+    the role of the sampling budget over them, so concentration measured
+    here tracks the concentration the per-token plans see (Eq. 3's
+    z-term; the activation-norm term is ~flat post-RMSNorm)."""
+    z = jnp.sqrt(jnp.maximum(tap_sq, 0.0)).reshape(-1)
+    n = z.shape[0]
+    s1 = jnp.sum(z)
+    s2 = jnp.sum(z * z)
+    ess = jnp.where(s2 > 0, (s1 * s1) / (n * jnp.maximum(s2, _EPS)), 1.0)
+    # probability atoms (uniform fallback mirrors column_row_probabilities)
+    p = jnp.where(s1 > 0, z / jnp.maximum(s1, _EPS),
+                  jnp.full((n,), 1.0 / n, z.dtype))
+    k = max(1, min(n, int(round(float(budget) * n))))
+    csum = jnp.cumsum(jnp.sort(p)[::-1])
+    c_star = plans.optimal_c_size(csum, k)
+    det_mass = jnp.where(c_star == 0, 0.0,
+                         csum[jnp.maximum(c_star - 1, 0)])
+    holds = det_mass > c_star.astype(p.dtype) / k          # Eq. 7
+    util = csum[k - 1]                                     # top-k mass
+    return jnp.stack([ess, holds.astype(jnp.float32), util])
+
+
+def update_stats(stats: Dict[str, jax.Array],
+                 tap_grads: Dict[str, jax.Array],
+                 budgets: Dict[str, float],
+                 active_tags=None,
+                 decay: float = STATS_DECAY) -> Dict[str, jax.Array]:
+    """EMA the fresh tap statistics into the running per-tag vectors.
+
+    ``budgets``: static resolved budget per tag (fixes the k the
+    condition/utilization stats are evaluated at; one value per compile,
+    like every other budget).  ``active_tags`` follows ``scatter``: tags
+    that ran exact this step (warmup phase, min_rows floor) would feed
+    all-zero taps, so they hold — their count does not advance either,
+    keeping controller warmups honest.  The first genuine update
+    replaces the neutral init outright (alpha=1 at count 0)."""
+    out = {}
+    for t, prev in stats.items():
+        if active_tags is not None and t not in active_tags:
+            out[t] = prev
+            continue
+        x = _stat_vector(tap_grads[t], budgets[t])
+        cnt = prev[STAT_COUNT]
+        alpha = jnp.where(cnt > 0, 1.0 - decay, 1.0)
+        ema = prev[:STAT_COUNT] + alpha * (x - prev[:STAT_COUNT])
+        out[t] = jnp.concatenate([ema, (cnt + 1.0)[None]])
     return out

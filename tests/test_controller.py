@@ -1,0 +1,453 @@
+"""Adaptive budget controllers: bounds/determinism properties, hysteresis
+(no re-plan churn on oscillating statistics), rule/policy integration,
+the scheduled-step driver's re-plan economy, and the masking agreement
+between znorm statistics and the cache scatter (rows-dim tags never
+contribute stats)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # degrade: property tests skip, example tests run
+    from conftest import given, settings, st  # noqa: F401
+
+from repro.core import (BudgetController, BudgetSchedule, ConditionRate,
+                        ESSProportional, FixedSchedule, PolicyRules, Rule,
+                        TagStats, WTACRSConfig)
+from repro.core.config import EstimatorKind, NormSource
+from repro.models import common as cm
+from repro.train import znorm
+
+KEY = jax.random.PRNGKey(0)
+
+CONTROLLERS = [
+    ESSProportional(b_min=0.1, b_max=0.8, levels=6, warmup=2),
+    ConditionRate(b_min=0.2, b_max=0.9, levels=5, warmup=1),
+    FixedSchedule(schedule=BudgetSchedule.linear(
+        start=1.0, end=0.1, begin_step=2, end_step=20, stages=4),
+        b_min=0.05, b_max=1.0),
+]
+
+
+def _drive(ctrl, stream, start=None):
+    """Feed a stats stream through a controller; returns the budget
+    sequence (one entry per step)."""
+    b = ctrl.initial_budget(start)
+    out = []
+    for step, s in enumerate(stream):
+        b = ctrl.propose(s, b, step)
+        out.append(b)
+    return out
+
+
+def _stats(ess=0.5, cond=0.5, util=0.5, count=10.0):
+    return TagStats(ess=ess, cond_rate=cond, util=util, count=count)
+
+
+# ---------------------------------------------------------------------------
+# Properties: bounds + determinism for every controller
+# ---------------------------------------------------------------------------
+
+class TestControllerProperties:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.floats(-0.5, 1.5), st.floats(0.0, 1.0),
+                              st.floats(0.0, 1.0), st.floats(0, 40)),
+                    min_size=1, max_size=40),
+           st.floats(0.0, 1.2))
+    def test_budget_always_within_bounds_and_deterministic(self, raw, start):
+        """Any stats stream (including out-of-range ess and None gaps):
+        every proposed budget stays in [b_min, b_max], and replaying the
+        identical stream reproduces the identical budget sequence."""
+        stream = [None if i % 7 == 3 else
+                  _stats(ess=e, cond=c, util=u, count=n)
+                  for i, (e, c, u, n) in enumerate(raw)]
+        for ctrl in CONTROLLERS:
+            seq = _drive(ctrl, stream, start=start)
+            assert all(ctrl.b_min - 1e-12 <= b <= ctrl.b_max + 1e-12
+                       for b in seq), (ctrl, seq)
+            assert ctrl.initial_budget(start) == ctrl.initial_budget(start)
+            assert seq == _drive(ctrl, stream, start=start)
+
+    def test_budget_rows_bounded_by_controller_bounds(self):
+        """The concrete per-layer k implied by any proposed budget stays
+        within the k-range implied by [b_min, b_max] (up to the shared
+        min_rows floor)."""
+        ctrl = ESSProportional(b_min=0.1, b_max=0.5, levels=5, warmup=0)
+        cfg = WTACRSConfig(budget=0.3, min_rows=2)
+        seq = _drive(ctrl, [_stats(ess=e) for e in
+                            (0.0, 1.0, 0.2, 0.9, 0.5) * 4], start=0.3)
+        for b in seq:
+            k = dataclasses.replace(cfg, budget=b).budget_rows(128)
+            k_lo = dataclasses.replace(cfg, budget=ctrl.b_min
+                                       ).budget_rows(128)
+            k_hi = dataclasses.replace(cfg, budget=ctrl.b_max
+                                       ).budget_rows(128)
+            assert k_lo <= k <= k_hi
+
+    def test_protocol_conformance(self):
+        for ctrl in CONTROLLERS:
+            assert isinstance(ctrl, BudgetController)
+
+    def test_invalid_params_rejected(self):
+        with pytest.raises(ValueError):
+            ESSProportional(b_min=0.0)          # budgets live in (0, 1]
+        with pytest.raises(ValueError):
+            ESSProportional(b_min=0.9, b_max=0.5)
+        with pytest.raises(ValueError):
+            ESSProportional(levels=1)
+        with pytest.raises(ValueError):
+            ConditionRate(lo=0.8, hi=0.4)
+        with pytest.raises(ValueError, match="absorbing"):
+            ESSProportional(b_max=1.0)   # exact = frozen stats
+        with pytest.raises(ValueError, match="absorbing"):
+            ConditionRate(b_max=1.0)
+        FixedSchedule(b_max=1.0)         # stats-free: exact is fine
+
+
+# ---------------------------------------------------------------------------
+# Hysteresis: oscillating statistics must not churn re-plans
+# ---------------------------------------------------------------------------
+
+class TestHysteresis:
+    def test_ess_oscillation_within_band_never_moves(self):
+        ctrl = ESSProportional(b_min=0.1, b_max=0.6, levels=6,
+                               hysteresis=0.25, warmup=0)
+        # level 0.3; targets oscillate around it well inside the band of
+        # half-width spacing*(0.5+0.25) = 0.075
+        b = 0.3
+        for step, ess in enumerate([0.35, 0.45, 0.35, 0.45] * 10):
+            nb = ctrl.propose(_stats(ess=ess), b, step)
+            assert nb == b            # hold: no re-plan, ever
+            b = nb
+
+    def test_ess_band_crossing_moves_exactly_one_level(self):
+        ctrl = ESSProportional(b_min=0.1, b_max=0.6, levels=6,
+                               hysteresis=0.25, warmup=0)
+        nb = ctrl.propose(_stats(ess=1.0), 0.3, 0)
+        assert nb == pytest.approx(0.4)
+
+    def test_condition_rate_inside_band_holds(self):
+        ctrl = ConditionRate(b_min=0.1, b_max=0.9, levels=7,
+                             lo=0.3, hi=0.8, warmup=0)
+        b = 0.4
+        for step, rate in enumerate([0.35, 0.75, 0.5, 0.6] * 10):
+            nb = ctrl.propose(_stats(cond=rate), b, step)
+            assert nb == b
+            b = nb
+
+    def test_condition_rate_walks_to_bound_then_holds(self):
+        ctrl = ConditionRate(b_min=0.25, b_max=0.85, levels=4,
+                             lo=0.3, hi=0.8, warmup=0)
+        seq = _drive(ctrl, [_stats(cond=0.95)] * 8, start=1.0)
+        assert seq[:3] == pytest.approx([0.65, 0.45, 0.25])
+        assert all(b == 0.25 for b in seq[3:])     # clamped, no churn
+
+    def test_warmup_holds_without_stats(self):
+        ctrl = ESSProportional(b_min=0.1, b_max=0.8, warmup=5)
+        assert ctrl.propose(_stats(ess=1.0, count=2.0), 0.3, 0) == 0.3
+        assert ctrl.propose(None, 0.3, 0) == 0.3
+
+    def test_warmup_zero_still_holds_on_fabricated_init_stats(self):
+        """count == 0 marks the neutral init vector (znorm.init_stats),
+        which is fabricated, not evidence — even warmup=0 must hold."""
+        ctrl = ESSProportional(b_min=0.1, b_max=0.8, warmup=0)
+        assert ctrl.propose(_stats(ess=1.0, count=0.0), 0.3, 0) == 0.3
+        assert ctrl.propose(_stats(ess=1.0, count=1.0), 0.3, 0) != 0.3
+
+    def test_fixed_schedule_wraps_budget_schedule(self):
+        sched = BudgetSchedule.warmup_exact(begin_step=5, end=0.3)
+        ctrl = FixedSchedule(schedule=sched)
+        assert ctrl.initial_budget(None) == 1.0
+        for step in (0, 4, 5, 9):
+            assert ctrl.propose(None, 1.0, step) == sched.budget_at(step)
+
+
+# ---------------------------------------------------------------------------
+# Rule / policy integration
+# ---------------------------------------------------------------------------
+
+class TestRuleIntegration:
+    def test_rule_of_accepts_controller_in_schedule_slot(self):
+        ctrl = ESSProportional(b_min=0.1, b_max=0.6, levels=6)
+        r = Rule.of("*mlp*", WTACRSConfig(budget=0.3, min_rows=2), ctrl)
+        assert r.controller is ctrl and r.schedule is None
+
+    def test_schedule_and_controller_mutually_exclusive(self):
+        with pytest.raises(ValueError):
+            Rule(pattern="*", schedule=BudgetSchedule.constant(0.3),
+                 controller=ESSProportional())
+
+    def test_non_controller_third_arg_rejected(self):
+        with pytest.raises(TypeError):
+            Rule.of("*", None, object())
+
+    def test_undriven_policy_resolves_to_initial_budget(self):
+        ctrl = ESSProportional(b_min=0.1, b_max=0.6, levels=6)
+        pol = cm.Policy(rules=PolicyRules.of(
+            Rule.of("*mlp*", WTACRSConfig(budget=0.3, min_rows=2), ctrl)))
+        got = pol.config_for("b0/mlp_wi")
+        assert got.budget == pytest.approx(ctrl.initial_budget(0.3))
+
+    def test_pinned_rule_budgets_override_and_change_signature(self):
+        ctrl = ESSProportional(b_min=0.1, b_max=0.6, levels=6)
+        pol = cm.Policy(rules=PolicyRules.of(
+            Rule.of("*mlp*", WTACRSConfig(budget=0.3, min_rows=2), ctrl)))
+        pinned = pol.with_rule_budgets((0.5,))
+        assert pinned.config_for("b0/mlp_wi").budget == 0.5
+        assert pinned.schedule_signature() == (0.5,)
+        assert pol.schedule_signature() != pinned.schedule_signature()
+        # non-matching tags are unaffected
+        assert pinned.config_for("b0/attn_q") == pol.config_for("b0/attn_q")
+
+    def test_stats_aggregation_is_pattern_scoped(self):
+        stats = {
+            "b0/mlp_wi": np.array([0.2, 1.0, 0.5, 4.0]),
+            "b0/mlp_wo": np.array([0.4, 0.0, 0.7, 8.0]),
+            "b0/attn_q": np.array([0.9, 1.0, 0.1, 2.0]),
+        }
+        agg = TagStats.aggregate(stats, "*mlp*")
+        assert agg.ess == pytest.approx(0.3)
+        assert agg.cond_rate == pytest.approx(0.5)
+        assert agg.count == 4.0            # most conservative tag
+        assert TagStats.aggregate(stats, "*nope*") is None
+
+    def test_stats_aggregation_explicit_tags_beat_pattern(self):
+        """The driver passes the tags a rule actually GOVERNS (first
+        match wins), not everything its glob would swallow."""
+        stats = {
+            "b0/mlp_wi": np.array([0.2, 1.0, 0.5, 4.0]),
+            "b0/mlp_wo": np.array([0.4, 0.0, 0.7, 8.0]),
+        }
+        agg = TagStats.aggregate(stats, tags=["b0/mlp_wo"])
+        assert agg.ess == pytest.approx(0.4)
+        assert agg.count == 8.0
+        assert TagStats.aggregate(stats, tags=[]) is None
+
+    def test_rules_default_seeds_controller_base_config(self):
+        """A rule inheriting PolicyRules.default resolves its controller
+        initial budget from the default config, not Policy.wtacrs."""
+        ctrl = ESSProportional(b_min=0.1, b_max=0.6, levels=6)
+        rules = PolicyRules.of(
+            Rule.of("*mlp*", None, ctrl),
+            default=WTACRSConfig(budget=0.5, min_rows=2))
+        pol = cm.Policy(wtacrs=WTACRSConfig(budget=0.3), rules=rules)
+        assert pol.config_for("b0/mlp_wi").budget == pytest.approx(
+            ctrl.initial_budget(0.5))
+        assert pol.schedule_signature() == (ctrl.initial_budget(0.5),)
+
+
+# ---------------------------------------------------------------------------
+# Scheduled-step driver: re-plans only at band crossings
+# ---------------------------------------------------------------------------
+
+class TestScheduledStepReplans:
+    def test_replans_counted_and_steady_state_reuses_compiled(self):
+        from repro.configs import get_config
+        from repro.launch import train_steps
+        from repro.models import registry as model_registry
+        from repro.train import optim
+
+        cfg = get_config("qwen2.5-3b", reduced=True)
+        ctrl = ESSProportional(b_min=0.1, b_max=0.6, levels=6, warmup=2)
+        pol = cm.Policy(rules=PolicyRules.of(Rule.of(
+            "*mlp*",
+            WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.3,
+                         min_rows=2,
+                         norm_source=NormSource.CACHED_GRAD),
+            ctrl)))
+        tags = znorm.collect_linear_tags(cfg, policy=pol)
+        state = train_steps.init_train_state(cfg, KEY, znorm_tags=tags,
+                                             n_dataset=8,
+                                             budget_stats=True)
+        step = train_steps.make_scheduled_train_step(
+            cfg, pol, optim.AdamWConfig(),
+            optim.linear_warmup_constant(1e-3), use_znorm_cache=True)
+        batch = model_registry.make_synthetic_batch(cfg, 4, 16, KEY)
+        batch["sample_ids"] = jnp.array([0, 3, 5, 7], jnp.int32)
+
+        budgets_seen = []
+        for _ in range(8):
+            state, metrics = step(state, batch)
+            assert np.isfinite(float(metrics["loss"]))
+            budgets_seen.append(step.budget_trajectory[-1]["budget"])
+
+        changes = [r for r in step.budget_trajectory
+                   if r["prev"] is not None]
+        # the driver moved (synthetic batch norms are near-uniform ->
+        # ess ~ 1 -> the controller climbs toward b_max)...
+        assert changes, "controller never moved despite uniform stats"
+        # ...the counter counts exactly the band crossings...
+        assert step.replans == len(changes)
+        # ...each re-plan compiles at most one new variant, and
+        # steady-state steps reuse the cache (8 steps >> compiles)
+        assert len(step.compiled) <= step.replans + 1
+        # every pinned budget respects the controller bounds
+        for r in step.budget_trajectory:
+            assert ctrl.b_min <= r["budget"] <= ctrl.b_max
+        # converged: the last steps did not re-plan
+        last = changes[-1]["step"]
+        assert last < 8 - 1, "controller still churning at end of run"
+
+    def test_fixed_schedule_controller_runs_without_znorm_cache(self):
+        """FixedSchedule ignores statistics (needs_stats=False), so a
+        policy using it as its only controller must run without a znorm
+        cache — and follow its schedule's plateaus."""
+        from repro.configs import get_config
+        from repro.launch import train_steps
+        from repro.models import registry as model_registry
+        from repro.train import optim
+
+        cfg = get_config("qwen2.5-3b", reduced=True)
+        ctrl = FixedSchedule(schedule=BudgetSchedule.warmup_exact(
+            begin_step=2, end=0.5))
+        pol = cm.Policy(rules=PolicyRules.of(Rule.of(
+            "*mlp*", WTACRSConfig(budget=0.5, min_rows=4), ctrl)))
+        state = train_steps.init_train_state(cfg, KEY)   # no znorm tags
+        step = train_steps.make_scheduled_train_step(
+            cfg, pol, optim.AdamWConfig(),
+            optim.linear_warmup_constant(1e-3))
+        batch = model_registry.make_synthetic_batch(cfg, 2, 16, KEY)
+        for _ in range(3):
+            state, metrics = step(state, batch)
+            assert np.isfinite(float(metrics["loss"]))
+        # exact warmup (steps 0-1) + sampled phase (step 2) = 2 compiles
+        assert len(step.compiled) == 2
+        assert step.replans == 1
+        assert [r["budget"] for r in step.budget_trajectory] == [1.0, 0.5]
+
+    def test_first_match_wins_governs_stat_ownership(self):
+        """A later broad rule's controller must not consume stats from
+        tags an earlier rule owns (and must not have its warmup frozen
+        by their counts)."""
+        from repro.configs import get_config
+        from repro.launch import train_steps
+        from repro.models import registry as model_registry
+        from repro.train import optim
+
+        cfg = get_config("qwen2.5-3b", reduced=True)
+        wcfg = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.3,
+                            min_rows=2,
+                            norm_source=NormSource.CACHED_GRAD)
+        pol = cm.Policy(rules=PolicyRules.of(
+            Rule.of("*mlp_wi", wcfg,
+                    ESSProportional(b_min=0.1, b_max=0.4, levels=4,
+                                    warmup=1)),
+            Rule.of("*mlp*", wcfg,
+                    ESSProportional(b_min=0.1, b_max=0.6, levels=6,
+                                    warmup=1))))
+        tags = znorm.collect_linear_tags(cfg, policy=pol)
+        state = train_steps.init_train_state(cfg, KEY, znorm_tags=tags,
+                                             n_dataset=8,
+                                             budget_stats=True)
+        step = train_steps.make_scheduled_train_step(
+            cfg, pol, optim.AdamWConfig(),
+            optim.linear_warmup_constant(1e-3), use_znorm_cache=True)
+        batch = model_registry.make_synthetic_batch(cfg, 4, 16, KEY)
+        batch["sample_ids"] = jnp.array([0, 3, 5, 7], jnp.int32)
+        state, _ = step(state, batch)
+        owned = step.owned_tags
+        assert all(t.endswith("mlp_wi") for t in owned[0]) and owned[0]
+        assert owned[1] and not any(t.endswith("mlp_wi")
+                                    for t in owned[1])
+
+    def test_controller_without_znorm_cache_raises(self):
+        from repro.configs import get_config
+        from repro.launch import train_steps
+        from repro.models import registry as model_registry
+        from repro.train import optim
+
+        cfg = get_config("qwen2.5-3b", reduced=True)
+        pol = cm.Policy(rules=PolicyRules.of(Rule.of(
+            "*mlp*", WTACRSConfig(budget=0.3, min_rows=2),
+            ESSProportional())))
+        # without use_znorm_cache the tap never refreshes the stats and
+        # the controller would silently never adapt: rejected at build
+        with pytest.raises(ValueError, match="use_znorm_cache"):
+            train_steps.make_scheduled_train_step(
+                cfg, pol, optim.AdamWConfig(),
+                optim.linear_warmup_constant(1e-3))
+        # and with the cache requested but a stats-less state: at step
+        step = train_steps.make_scheduled_train_step(
+            cfg, pol, optim.AdamWConfig(),
+            optim.linear_warmup_constant(1e-3), use_znorm_cache=True)
+        state = train_steps.init_train_state(cfg, KEY)   # no znorm tags
+        batch = model_registry.make_synthetic_batch(cfg, 2, 16, KEY)
+        with pytest.raises(ValueError, match="budget_stats"):
+            step(state, batch)
+
+
+# ---------------------------------------------------------------------------
+# Stats masking agrees with the scatter's zero-tap guard
+# ---------------------------------------------------------------------------
+
+class TestStatsMasking:
+    def test_inactive_tags_hold_stats_and_count(self):
+        stats = znorm.init_stats(["a", "b"])
+        taps = {"a": jnp.ones((1, 4)), "b": jnp.zeros((1, 4))}
+        new = znorm.update_stats(stats, taps, {"a": 0.5, "b": 0.5},
+                                 active_tags=frozenset({"a"}))
+        assert float(new["a"][znorm.STAT_COUNT]) == 1.0
+        np.testing.assert_array_equal(np.asarray(new["b"]),
+                                      np.asarray(stats["b"]))
+
+    def test_rows_dim_tag_never_contributes_stats(self):
+        """The MoE router samples over flattened batch*seq rows, not the
+        token dim: it is excluded from the znorm cache, and the stats
+        update — keyed off the same tag set — must never read its tap,
+        even when one is present in the tap dict."""
+        from repro.configs import get_config
+        from repro.models import registry as model_registry
+
+        cfg = get_config("dbrx-132b", reduced=True)
+        rec = cm.tag_recorder()
+        with rec as tags:
+            jax.eval_shape(
+                lambda p, b: model_registry.loss_fn(
+                    cfg, p, b,
+                    cm.Policy(wtacrs=WTACRSConfig(budget=0.5, min_rows=1)),
+                    key=KEY)[0],
+                model_registry.abstract_params(cfg)[0],
+                model_registry.train_batch_specs(cfg, 2, 8))
+        rows_tags = [t for t in tags
+                     if rec.dims.get(t) == cm.SAMPLED_DIM_ROWS]
+        assert rows_tags, "expected the MoE router to sample over rows"
+
+        cache_tags = znorm.collect_linear_tags(cfg)
+        assert not set(rows_tags) & set(cache_tags)
+
+        stats = znorm.init_stats(cache_tags)
+        taps = {t: jnp.ones((cfg.n_repeats, 4)) for t in cache_tags}
+        # a rows-dim tap sneaking into the dict must be ignored, not
+        # scattered into statistics
+        taps[rows_tags[0]] = jnp.full((7, 13), 1e9)
+        new = znorm.update_stats(stats, taps,
+                                 {t: 0.5 for t in cache_tags},
+                                 active_tags=None)
+        assert set(new) == set(cache_tags)
+        assert rows_tags[0] not in new
+
+    def test_stat_vector_values(self):
+        """Hand-checked ESS / condition / utilization on a concentrated
+        tap: one dominant atom out of four."""
+        tap_sq = jnp.array([[100.0, 1.0, 1.0, 1.0]])    # z = (10,1,1,1)
+        stats = znorm.update_stats(znorm.init_stats(["t"]),
+                                   {"t": tap_sq}, {"t": 0.5})
+        v = np.asarray(stats["t"])
+        # ess = (13)^2 / (4 * 103)
+        assert v[znorm.STAT_ESS] == pytest.approx(169 / 412, rel=1e-5)
+        # k = 2: |C|*=1 captures 10/13 > 1/2 -> condition holds
+        assert v[znorm.STAT_COND] == 1.0
+        # top-2 mass = 11/13
+        assert v[znorm.STAT_UTIL] == pytest.approx(11 / 13, rel=1e-5)
+        assert v[znorm.STAT_COUNT] == 1.0
+
+    def test_all_zero_tap_reads_as_uniform(self):
+        stats = znorm.update_stats(znorm.init_stats(["t"]),
+                                   {"t": jnp.zeros((1, 4))}, {"t": 0.5})
+        v = np.asarray(stats["t"])
+        assert v[znorm.STAT_ESS] == pytest.approx(1.0)
+        assert v[znorm.STAT_UTIL] == pytest.approx(0.5)
