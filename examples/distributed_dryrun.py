@@ -5,7 +5,8 @@
 
 Builds the 2x16x16 (or 16x16) production mesh on 512 host devices,
 lowers + compiles the paper-faithful WTA-CRS train/serve step with full
-DP/TP/EP shardings, and prints memory/cost/collective analysis — exactly
+DP/TP/EP shardings through ``run.dryrun()``, and prints memory/cost/
+collective analysis plus the run report's §Roofline section — exactly
 what the full sweep (python -m repro.launch.dryrun --all) records per
 cell.
 """
@@ -15,8 +16,8 @@ import argparse
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-from repro.launch.dryrun import lower_cell               # noqa: E402
-from repro.launch.roofline import roofline_terms         # noqa: E402
+from repro.api import Run, RunSpec                       # noqa: E402
+from repro.launch.dryrun import dryrun_policy            # noqa: E402
 
 
 def main():
@@ -26,8 +27,9 @@ def main():
     ap.add_argument("--mesh", default="multi", choices=["single", "multi"])
     args = ap.parse_args()
 
-    rec, compiled, lowered = lower_cell(args.arch, args.shape,
-                                        args.mesh == "multi")
+    run = Run(RunSpec(arch=args.arch, reduced=False,
+                      policy=dryrun_policy()))
+    rec = run.dryrun(shape=args.shape, mesh=args.mesh)
     if rec["status"] != "ok":
         print(rec)
         return
@@ -38,12 +40,7 @@ def main():
     print(f"  per-device FLOPs (trip-aware): {rec['cost']['flops']:.4g}")
     print(f"  collectives: {rec['collectives']['counts']} "
           f"({rec['collectives']['total_bytes'] / 2**30:.2f} GiB/device)")
-    rt = roofline_terms(rec)
-    print(f"  roofline: compute {rt['compute_s']:.4f}s | memory "
-          f"{rt['memory_s']:.4f}s | collective {rt['collective_s']:.4f}s")
-    print(f"  dominant: {rt['dominant']}  "
-          f"useful-FLOPs {rt['useful_flops_ratio'] * 100:.1f}%  "
-          f"roofline fraction {rt['roofline_fraction'] * 100:.1f}%")
+    print(run.report())
 
 
 if __name__ == "__main__":

@@ -1,29 +1,27 @@
 """End-to-end driver: LoRA + WTA-CRS fine-tuning with the dataset-level
 gradient-norm cache (Algorithm 1), fault-tolerant checkpointing, and
-automatic resume.
+automatic bit-faithful resume — all through one RunSpec.
 
     PYTHONPATH=src python examples/finetune_lora_wtacrs.py \
         --arch xlstm-125m --steps 200 --ckpt-dir /tmp/wtacrs_ckpt
 
-Kill it at any point and re-run the same command: training resumes from
-the last durable checkpoint.  ``--full-size`` trains the ~125M published
-xLSTM config (the paper-style "train a ~100M model" run; budget a few
-hundred steps).
+Kill it at any point and re-run the same command: ``Run.resume``
+restores params, optimizer, znorm cache, budget statistics AND the
+adaptive controller's band state from the last durable checkpoint, so
+the budget trajectory continues instead of resetting.  ``--adaptive``
+attaches an ESSProportional budget controller to the MLP blocks; the
+run report prints its trajectory.  ``--full-size`` trains the ~125M
+published xLSTM config.
 """
 import argparse
-import os
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.core.config import EstimatorKind, NormSource, WTACRSConfig
+from repro.api import DataSpec, Run, RunSpec
+from repro.core import (BudgetSchedule, ESSProportional, PolicyRules,
+                        Rule, WTACRSConfig)
+from repro.core.config import EstimatorKind, NormSource
 from repro.core.lora import LoRAConfig
-from repro.core.policy import BudgetSchedule, PolicyRules
 from repro.models import common as cm
-from repro.train import checkpoint, data, optim, znorm
-from repro.launch import train_steps
+from repro.train import optim
 
 
 def main():
@@ -38,16 +36,22 @@ def main():
     ap.add_argument("--warmup-exact", type=int, default=0,
                     help="steps to run every sampled layer exact before "
                          "dropping to --budget (BudgetSchedule)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="ESSProportional budget controller on the MLPs")
     ap.add_argument("--full-size", action="store_true")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=not args.full_size)
     # CACHED_GRAD: the dataset gradient-norm cache actually drives the
-    # column-row probabilities (ACTIVATION_ONLY would only warm it).
+    # column-row probabilities — RunSpec sees it and wires the cache,
+    # sample_ids plumbing, and (for --adaptive) budget_stats by itself.
     base = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=args.budget,
                         min_rows=4, norm_source=NormSource.CACHED_GRAD)
     rules = None
-    if args.warmup_exact > 0:
+    if args.adaptive:
+        rules = PolicyRules.of(Rule.of(
+            "*mlp*", base,
+            ESSProportional(b_min=0.1, b_max=0.6, levels=6, warmup=3)))
+    elif args.warmup_exact > 0:
         rules = PolicyRules.of(
             ("*", base, BudgetSchedule.warmup_exact(
                 begin_step=args.warmup_exact, end=args.budget)))
@@ -57,49 +61,22 @@ def main():
         # level in this framework; flip enabled=True for adapter training
     )
 
-    n_data = 512
-    tags = znorm.collect_linear_tags(cfg, policy=policy)
-    print(f"{len(tags)} WTA-CRS'd linears; dataset cache over {n_data} "
-          f"samples")
-    ds = data.SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                          n_samples=n_data, seed=0, branching=2)
+    spec = RunSpec(
+        arch=args.arch, reduced=not args.full_size, policy=policy,
+        steps=args.steps, batch_size=args.batch,
+        optimizer=optim.AdamWConfig(weight_decay=0.0, grad_clip_norm=1.0),
+        lr=3e-3, lr_schedule="wsd", warmup=10,
+        data=DataSpec(seq_len=args.seq, n_samples=512, branching=2),
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
 
-    state = train_steps.init_train_state(cfg, jax.random.PRNGKey(0),
-                                         znorm_tags=tags, n_dataset=n_data)
-    start = 0
-    if checkpoint.latest_step(args.ckpt_dir) is not None:
-        state, start = checkpoint.restore(args.ckpt_dir,
-                                          jax.eval_shape(lambda: state))
-        print(f"resumed from step {start}")
-
-    # scheduled step: re-resolves budget schedules at the live step
-    # counter (one compile per schedule plateau; exactly one when the
-    # policy is schedule-free)
-    step = train_steps.make_scheduled_train_step(
-        cfg, policy, optim.AdamWConfig(weight_decay=0.0,
-                                       grad_clip_norm=1.0),
-        optim.wsd(3e-3, total_steps=args.steps, warmup=10),
-        use_znorm_cache=True)
-    ckpt = checkpoint.AsyncCheckpointer(args.ckpt_dir, keep=3)
-
-    it = ds.epoch(args.batch)
-    t0 = time.perf_counter()
-    for s in range(start, args.steps):
-        try:
-            b = next(it)
-        except StopIteration:
-            it = ds.epoch(args.batch, shuffle_seed=s)
-            b = next(it)
-        b = {k: jnp.asarray(v) for k, v in b.items()}
-        state, m = step(state, b)
-        if s % 10 == 0 or s == args.steps - 1:
-            dt = (time.perf_counter() - t0) / max(s - start + 1, 1)
-            print(f"step {s:5d}  loss {float(m['loss']):.4f}  "
-                  f"{dt * 1e3:.0f} ms/step")
-        if (s + 1) % args.ckpt_every == 0:
-            ckpt.save(s + 1, state)
-    ckpt.wait()
-    checkpoint.save(args.ckpt_dir, args.steps, state)
+    run = Run.resume(spec)
+    if run.state is not None:
+        print(f"resumed from step {int(run.state['step'])}")
+    print(f"{len(run.tags)} WTA-CRS'd linears; dataset cache over "
+          f"{spec.data.n_samples} samples")
+    run.fit(log_every=10)
+    run.save()
+    print(run.report())
     print("final checkpoint written; re-run to verify resume is a no-op")
 
 

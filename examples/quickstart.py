@@ -2,24 +2,19 @@
 
     PYTHONPATH=src python examples/quickstart.py [--steps 40] [--budget 0.3]
 
-Demonstrates the three-line integration: pick a policy, build a train
-step, feed batches.  The estimator swaps in at the linear-layer level —
+One declarative RunSpec replaces the hand-wired trainer assembly: pick
+a policy, Run.fit.  The estimator swaps in at the linear-layer level —
 no model-code changes.  ``--per-layer`` upgrades the single global
 config to a PolicyRules policy: attention output projections stay exact
-while the MLP block samples at half the headline budget — the
-per-tag-glob API that replaced the one-knob WTACRSConfig.
+while the MLP block samples at half the headline budget.
 """
 import argparse
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.core.config import EstimatorKind, WTACRSConfig
-from repro.core.policy import PolicyRules
+from repro.api import DataSpec, Run, RunSpec
+from repro.core import PolicyRules, WTACRSConfig
+from repro.core.config import EstimatorKind
 from repro.models import common as cm
-from repro.train import data, optim
-from repro.launch import train_steps
+from repro.train import optim
 
 
 def main():
@@ -35,38 +30,23 @@ def main():
                     help="use the published config instead of the reduced")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=not args.full_size)
-    base = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=args.budget,
-                        min_rows=4)
     rules = None
     if args.per_layer:
         rules = PolicyRules.of(
             ("*attn_o", {"kind": EstimatorKind.EXACT}),
             ("*mlp_*", {"budget": args.budget / 2}),
         )
-    policy = cm.Policy(wtacrs=base, rules=rules)
+    policy = cm.Policy(
+        wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS,
+                            budget=args.budget, min_rows=4),
+        rules=rules)
 
-    ds = data.SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32,
-                          n_samples=128, seed=0, branching=2)
-    state = train_steps.init_train_state(cfg, jax.random.PRNGKey(0))
-    step = jax.jit(train_steps.make_train_step(
-        cfg, policy, optim.AdamWConfig(),
-        optim.make_schedule(args.schedule, 3e-3, total_steps=args.steps,
-                            warmup=5)))
-
-    it = ds.epoch(8)
-    for s in range(args.steps):
-        try:
-            b = next(it)
-        except StopIteration:
-            it = ds.epoch(8, shuffle_seed=s)
-            b = next(it)
-        b = {k: jnp.asarray(v) for k, v in b.items() if k != "sample_ids"}
-        state, m = step(state, b)
-        if s % 5 == 0 or s == args.steps - 1:
-            print(f"step {s:4d}  loss {float(m['loss']):.4f}  "
-                  f"lr {float(m['lr']):.2e}  "
-                  f"gnorm {float(m['grad_norm']):.3f}")
+    run = Run(RunSpec(
+        arch=args.arch, reduced=not args.full_size, policy=policy,
+        steps=args.steps, batch_size=8, lr=3e-3,
+        lr_schedule=args.schedule, warmup=5,
+        data=DataSpec(seq_len=32, n_samples=128, branching=2)))
+    run.fit(log_every=5)
     print("done.")
 
 

@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/serve_decode.py --arch zamba2-2.7b \
         --batch 4 --prompt-len 32 --gen 24
 
-Exercises the production serve path: prefill builds the caches, then
-single-token serve steps stream out a batch of continuations.
+Exercises the production serve path through the Run façade: a RunSpec
+names the arch, ``run.prefill`` streams the prompt batch into
+headroom-sized caches, and ``run.decode`` steps out a batch of greedy
+continuations.
 """
 import argparse
 import time
@@ -12,10 +14,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import Run, RunSpec
 from repro.configs import get_config
-from repro.models import common as cm
-from repro.models import registry
-from repro.launch import train_steps
 
 
 def main():
@@ -30,31 +30,22 @@ def main():
     cfg = get_config(args.arch, reduced=not args.full_size)
     if cfg.is_encdec:
         raise SystemExit("use an LM arch for this example")
-    params, _ = registry.init_params(cfg, jax.random.PRNGKey(0))
-    policy = cm.Policy()
+    run = Run(RunSpec(arch=args.arch, reduced=not args.full_size,
+                      seed=0)).init()
 
-    max_len = args.prompt_len + args.gen
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size, jnp.int32)
 
-    # prefill token-by-token into headroom-sized caches (the fused
-    # registry.prefill path emits caches sized to the prompt; serving
-    # wants headroom, so we stream the prompt through serve steps)
-    serve = jax.jit(train_steps.make_serve_step(cfg, policy))
-    states = registry.decode_state_init(cfg, args.batch, max_len)
     t0 = time.perf_counter()
-    tok = prompts[:, 0]
-    for t in range(args.prompt_len - 1):
-        _, _, states = serve(params, prompts[:, t], jnp.asarray(t), states)
+    tok, pos, states = run.prefill(prompts, gen=args.gen)
     print(f"prefill {args.prompt_len} tokens x {args.batch} reqs: "
           f"{time.perf_counter() - t0:.2f}s")
 
-    tok = prompts[:, -1]
     out = []
     t0 = time.perf_counter()
-    for t in range(args.prompt_len - 1, max_len - 1):
-        tok, logits, states = serve(params, tok, jnp.asarray(t), states)
+    for t in range(pos, pos + args.gen):
+        tok, logits, states = run.decode(tok, t, states)
         out.append(tok)
     dt = time.perf_counter() - t0
     gen = jnp.stack(out, axis=1)

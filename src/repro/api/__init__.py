@@ -1,0 +1,23 @@
+"""`repro.api` — the declarative façade over the WTA-CRS trainer.
+
+:class:`RunSpec` describes a run (arch, policy, optimizer, schedule,
+data, checkpoint/mesh/microbatch options); :class:`Run` executes it —
+deriving the znorm-cache and budget-stats wiring from the policy,
+owning the scheduled-step compile cache and controller band state, and
+checkpointing ALL of it so kill/resume is bit-faithful.
+
+    from repro.api import Run, RunSpec
+
+    run = Run.resume(RunSpec(arch="qwen2.5-3b", policy=policy,
+                             steps=40, checkpoint_dir="/tmp/ck",
+                             checkpoint_every=10))
+    run.fit(log_every=5)
+    print(run.report())
+
+The low-level builders (``launch.train_steps``, ``train.znorm``,
+``train.checkpoint``) stay public; the façade only composes them.
+"""
+from repro.api.spec import DataSpec, RunSpec
+from repro.api.run import Run
+
+__all__ = ["DataSpec", "Run", "RunSpec"]

@@ -1,0 +1,306 @@
+"""The Run session: a live training/serving session built from a RunSpec.
+
+One object owns everything the hand-wired path spread over eight call
+sites: tag enumeration, state init (cache + stats sized from the
+policy), the scheduled step driver and its compile cache, controller
+band state, checkpointing with a versioned run-state record, the serve
+path, and reporting.  Algorithm 1 becomes::
+
+    run = Run(RunSpec(arch="xlstm-125m", policy=policy, steps=200,
+                      checkpoint_dir="/tmp/ck", checkpoint_every=25))
+    run.fit()                      # or: run.step(batch) per batch
+    print(run.report())
+
+Kill it anywhere and ``Run.resume(spec)`` continues bit-faithfully:
+params, optimizer, znorm cache, budget statistics AND the scheduled
+driver's controller band positions all come back (the band state used
+to live in a closure and silently reset to ``initial_budget`` on
+resume; it now rides the checkpoint manifest as a versioned record).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.spec import RunSpec
+from repro.configs import get_config
+from repro.models import registry
+from repro.train import checkpoint, znorm
+from repro.launch import mesh as mesh_lib
+from repro.launch import report as report_lib
+from repro.launch import train_steps
+
+
+class Run:
+    """A training/serving session.  See module docstring.
+
+    Attributes of note: ``state`` (the train-state pytree), ``history``
+    (per-step float metrics), ``step_fn`` (the scheduled driver —
+    ``step_fn.compiled`` / ``.replans`` / ``.budget_trajectory`` expose
+    the re-plan economy), ``tags`` (the znorm-cache tag list, empty when
+    the policy needs no cache).
+    """
+
+    def __init__(self, spec: RunSpec):
+        self.spec = spec
+        self.cfg = get_config(spec.arch, reduced=spec.reduced)
+        self.policy = spec.policy
+        self.use_znorm_cache = spec.use_znorm_cache
+        self.track_budget_stats = spec.track_budget_stats
+        self.dataset = spec.data.build(self.cfg)
+        self.tags: List[str] = (
+            znorm.collect_linear_tags(self.cfg, policy=self.policy)
+            if self.use_znorm_cache else [])
+        self.mesh = (mesh_lib.make_host_mesh(spec.model_parallel)
+                     if spec.mesh == "host" else None)
+        self.state: Optional[Dict[str, Any]] = None
+        self.history: List[dict] = []
+        self.schedule_state = train_steps.ScheduleState()
+        self._step_fn: Optional[train_steps.ScheduledStepFn] = None
+        self._serve_fn = None
+        self._async_ckpt: Optional[checkpoint.AsyncCheckpointer] = None
+        self._dryrun_rec: Optional[dict] = None
+
+    # ------------------------------------------------------------------
+    # state lifecycle
+    # ------------------------------------------------------------------
+
+    def init(self) -> "Run":
+        """Allocate the train state (idempotent)."""
+        if self.state is None:
+            self.state = train_steps.init_train_state(
+                self.cfg, jax.random.PRNGKey(self.spec.seed),
+                znorm_tags=self.tags if self.use_znorm_cache else None,
+                n_dataset=self.spec.data.n_samples,
+                budget_stats=self.track_budget_stats)
+            self.state = self._shard(self.state)
+        return self
+
+    def _shard(self, state):
+        if self.mesh is None:
+            return state
+        _, axes = registry.abstract_params(self.cfg)
+        sh = train_steps.train_state_shardings(self.cfg, state, axes,
+                                               self.mesh)
+        return jax.device_put(state, sh)
+
+    def _abstract_state(self):
+        state, _ = train_steps.abstract_train_state(
+            self.cfg,
+            znorm_tags=self.tags if self.use_znorm_cache else None,
+            n_dataset=self.spec.data.n_samples,
+            budget_stats=self.track_budget_stats)
+        return state
+
+    @property
+    def step_fn(self) -> train_steps.ScheduledStepFn:
+        """The scheduled step driver (built on first use, shared by
+        every ``step``/``fit`` call so the compile cache and controller
+        band state persist)."""
+        if self._step_fn is None:
+            data_axes = self.spec.data_axes
+            if (data_axes is None and self.mesh is not None
+                    and self.spec.microbatches > 1):
+                data_axes = mesh_lib.data_axes(self.mesh)
+            self._step_fn = train_steps.make_scheduled_train_step(
+                self.cfg, self.policy, self.spec.optimizer,
+                self.spec.make_lr_schedule(), jit=self.spec.jit,
+                schedule_state=self.schedule_state,
+                use_znorm_cache=self.use_znorm_cache,
+                microbatches=self.spec.microbatches,
+                data_axes=data_axes)
+        return self._step_fn
+
+    # ------------------------------------------------------------------
+    # training
+    # ------------------------------------------------------------------
+
+    def step(self, batch) -> Dict[str, float]:
+        """One optimizer step on one batch (dict of arrays; a
+        ``sample_ids`` entry is consumed by the znorm cache and dropped
+        automatically when the policy needs none)."""
+        self.init()
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        if not self.use_znorm_cache:
+            b.pop("sample_ids", None)
+        elif "sample_ids" not in b:
+            raise ValueError(
+                "this run's policy needs the znorm cache, so every "
+                "batch must carry 'sample_ids' (dataset sample indices; "
+                "DataSpec-built datasets provide them)")
+        s = int(self.state["step"])
+        self.state, metrics = self.step_fn(self.state, b)
+        m = {k: float(v) for k, v in metrics.items()}
+        self.history.append({"step": s, **m})
+        return m
+
+    def fit(self, dataset=None, steps: Optional[int] = None,
+            log_every: int = 0) -> List[dict]:
+        """Train from the state's current step to ``steps`` (default
+        ``spec.steps``), checkpointing every ``spec.checkpoint_every``
+        steps.  ``dataset`` overrides the spec-built corpus; it must
+        expose ``batch_at(step, batch_size)`` (stateless step-indexed
+        batches are what make kill/resume replay exact)."""
+        self.init()
+        ds = dataset if dataset is not None else self.dataset
+        if (dataset is not None and self.use_znorm_cache
+                and getattr(ds, "n_samples", None) is not None
+                and ds.n_samples > self.spec.data.n_samples):
+            raise ValueError(
+                f"override dataset has {ds.n_samples} samples but the "
+                f"znorm cache was sized to spec.data.n_samples "
+                f"= {self.spec.data.n_samples}; out-of-range sample_ids "
+                f"would silently clamp onto the last cache column.  Set "
+                f"DataSpec(n_samples=...) to cover the dataset.")
+        total = self.spec.steps if steps is None else steps
+        start = int(self.state["step"])
+        t0 = time.perf_counter()
+        for s in range(start, total):
+            m = self.step(ds.batch_at(s, self.spec.batch_size))
+            if log_every and (s % log_every == 0 or s == total - 1):
+                dt = (time.perf_counter() - t0) / max(s - start + 1, 1)
+                print(f"step {s:5d}  loss {m['loss']:.4f}  "
+                      f"lr {m['lr']:.2e}  {dt * 1e3:.0f} ms/step")
+            if (self.spec.checkpoint_every
+                    and (s + 1) % self.spec.checkpoint_every == 0):
+                self.save(block=False)
+        if self._async_ckpt is not None:
+            self._async_ckpt.wait()
+        return self.history
+
+    # ------------------------------------------------------------------
+    # checkpointing
+    # ------------------------------------------------------------------
+
+    def _run_state_metadata(self) -> dict:
+        # snapshot history: the async checkpointer serializes on a
+        # worker thread while fit() keeps appending to the live list
+        return checkpoint.pack_run_state(
+            self.schedule_state.to_json(),
+            arch=self.spec.arch,
+            history=[dict(h) for h in self.history])
+
+    def save(self, block: bool = True) -> None:
+        """Checkpoint state + the versioned run-state record (driver
+        band positions, trajectory, metrics history).  ``block=False``
+        overlaps the disk write with subsequent steps."""
+        if not self.spec.checkpoint_dir:
+            raise ValueError("RunSpec.checkpoint_dir is not set")
+        self.init()
+        step = int(self.state["step"])
+        if block:
+            if self._async_ckpt is not None:
+                self._async_ckpt.wait()
+            checkpoint.save(self.spec.checkpoint_dir, step, self.state,
+                            metadata=self._run_state_metadata(),
+                            keep=self.spec.checkpoint_keep)
+        else:
+            if self._async_ckpt is None:
+                self._async_ckpt = checkpoint.AsyncCheckpointer(
+                    self.spec.checkpoint_dir,
+                    keep=self.spec.checkpoint_keep)
+            self._async_ckpt.save(step, self.state,
+                                  metadata=self._run_state_metadata())
+
+    @classmethod
+    def restore(cls, spec: RunSpec, step: Optional[int] = None) -> "Run":
+        """Rebuild a Run from its latest (or given-step) checkpoint:
+        params, optimizer, znorm cache, budget statistics, metrics
+        history AND the scheduled driver's controller band state — the
+        budget trajectory continues instead of resetting to every
+        controller's ``initial_budget``."""
+        if not spec.checkpoint_dir:
+            raise ValueError("RunSpec.checkpoint_dir is not set")
+        run = cls(spec)
+        state, step = checkpoint.restore(spec.checkpoint_dir,
+                                         run._abstract_state(), step=step)
+        run.state = run._shard(state)
+        rec = checkpoint.unpack_run_state(
+            checkpoint.read_manifest(spec.checkpoint_dir, step))
+        if rec is not None:
+            if "schedule_state" in rec:
+                run.schedule_state = train_steps.ScheduleState.from_json(
+                    rec["schedule_state"])
+            run.history = [dict(h) for h in rec.get("history", [])]
+        return run
+
+    @classmethod
+    def resume(cls, spec: RunSpec, step: Optional[int] = None) -> "Run":
+        """``restore`` when a checkpoint exists, else a fresh Run — the
+        crash-rerun-the-same-command entry point."""
+        if (spec.checkpoint_dir
+                and checkpoint.latest_step(spec.checkpoint_dir)
+                is not None):
+            return cls.restore(spec, step=step)
+        return cls(spec)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def _serve(self):
+        if self._serve_fn is None:
+            fn = train_steps.make_serve_step(self.cfg, self.policy)
+            self._serve_fn = jax.jit(fn) if self.spec.jit else fn
+        return self._serve_fn
+
+    def prefill(self, prompts, gen: int = 0):
+        """Stream a (B, S) prompt batch through serve steps into decode
+        caches with ``S + gen`` token headroom.  Returns
+        ``(last_token, pos, states)`` ready for :meth:`decode`."""
+        self.init()
+        prompts = jnp.asarray(prompts)
+        serve = self._serve()
+        states = registry.decode_state_init(
+            self.cfg, prompts.shape[0], prompts.shape[1] + gen)
+        for t in range(prompts.shape[1] - 1):
+            _, _, states = serve(self.state["params"], prompts[:, t],
+                                 jnp.asarray(t), states)
+        return prompts[:, -1], prompts.shape[1] - 1, states
+
+    def decode(self, token, pos, states):
+        """One greedy decode step: ``(next_token, logits, states)``."""
+        self.init()
+        return self._serve()(self.state["params"], token,
+                             jnp.asarray(pos), states)
+
+    def generate(self, prompts, gen: int) -> jax.Array:
+        """Greedy continuation: (B, S) prompts -> (B, gen) token ids."""
+        tok, pos, states = self.prefill(prompts, gen=gen)
+        out = []
+        for t in range(pos, pos + gen):
+            tok, _, states = self.decode(tok, t, states)
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+    # ------------------------------------------------------------------
+    # analysis
+    # ------------------------------------------------------------------
+
+    def dryrun(self, shape: str = "train_4k", mesh: str = "single"
+               ) -> dict:
+        """Lower+compile this run's (arch, policy) on a production mesh
+        cell and keep the record for :meth:`report`."""
+        from repro.launch.dryrun import lower_cell
+        rec, _, _ = lower_cell(self.spec.arch, shape, mesh == "multi",
+                               policy=self.policy,
+                               microbatches=(self.spec.microbatches
+                                             if self.spec.microbatches > 1
+                                             else None))
+        self._dryrun_rec = rec
+        return rec
+
+    def report(self) -> str:
+        """Markdown report: §Run metrics summary, §Budgets controller
+        trajectory + re-plan economy, §Roofline (when ``dryrun`` ran)."""
+        n_steps = int(self.state["step"]) if self.state is not None else 0
+        n_compiles = (len(self._step_fn.compiled)
+                      if self._step_fn is not None else 0)
+        return report_lib.run_report(
+            n_steps=n_steps,
+            budget_records=self.schedule_state.trajectory,
+            n_compiles=n_compiles, history=self.history,
+            roofline_rec=self._dryrun_rec)

@@ -157,7 +157,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         policy = dc.replace(policy, flash_block=flash_block)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_lib.use_mesh(mesh):
         if shape.kind == "train":
             state, axes = train_steps.abstract_train_state(cfg)
             state_sh = train_steps.train_state_shardings(
@@ -219,6 +219,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax 0.4.x returns [per-device dict]
+        ca = ca[0] if ca else {}
     from repro.launch import hlo_cost
     hlo_text = compiled.as_text()
     hc = hlo_cost.module_cost(hlo_text)

@@ -25,6 +25,15 @@ def make_mesh(shape, axes):
                          axis_types=(axis_type.Auto,) * len(axes))
 
 
+def use_mesh(mesh):
+    """Version-compat mesh context: jax >= 0.5 enters a mesh with
+    ``jax.set_mesh``; on 0.4.x the Mesh object is itself the context
+    manager.  Use ``with use_mesh(m):`` instead of either directly."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -73,6 +73,37 @@ def budget_report_from_step_fn(step_fn, n_steps: int) -> str:
                          len(step_fn.compiled))
 
 
+def run_report(*, n_steps: int, budget_records: List[dict],
+               n_compiles: int, history: List[dict] = None,
+               roofline_rec: dict = None) -> str:
+    """One markdown report for a façade run (``repro.api.Run.report``):
+    a §Run summary over the metrics history, the §Budgets controller
+    trajectory, and — when the run did a dry-run lowering — the
+    §Roofline terms of its cell."""
+    parts = ["## §Run\n"]
+    if history:
+        losses = [h["loss"] for h in history if "loss" in h]
+        line = f"{n_steps} steps"
+        if losses:
+            line += (f"; loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+                     f"(min {min(losses):.4f})")
+        parts.append(line + ".\n")
+    else:
+        parts.append(f"{n_steps} steps (no metrics recorded).\n")
+    parts.append(budget_report(budget_records, n_steps, n_compiles))
+    if roofline_rec is not None and roofline_rec.get("status") == "ok":
+        rt = roofline.roofline_terms(roofline_rec)
+        parts.append(
+            f"\n## §Roofline\n\n"
+            f"{roofline_rec['arch']} x {roofline_rec['shape']} x "
+            f"{roofline_rec['mesh']}: compute {rt['compute_s']:.4f}s | "
+            f"memory {rt['memory_s']:.4f}s | collective "
+            f"{rt['collective_s']:.4f}s; dominant {rt['dominant']}, "
+            f"useful-FLOPs {rt['useful_flops_ratio'] * 100:.1f}%, "
+            f"roofline fraction {rt['roofline_fraction'] * 100:.1f}%.\n")
+    return "\n".join(parts)
+
+
 def generate(dryrun_dir: str = "experiments/dryrun") -> str:
     recs = roofline.load_records(dryrun_dir)
     rows = roofline.summarize(dryrun_dir)

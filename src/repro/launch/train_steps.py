@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -100,7 +100,9 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
     the probabilities (ACTIVATION_ONLY ignores it by contract but still
     warms it through the tap).  ``microbatches`` > 1 scans gradient
     accumulation over the leading batch split (activation memory /
-    global batch trade).
+    global batch trade); combined with the cache, each microbatch
+    gathers the cache columns for its own sample ids and scatters its
+    tap back inside the accumulation scan.
 
     Policies with budget schedules: this builder compiles ONE policy
     resolution (``policy.step`` as given).  Use
@@ -136,19 +138,15 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
         key = jax.random.fold_in(key, step)
 
         znorms = None
-        if use_znorm_cache:
+        if use_znorm_cache and microbatches == 1:
             znorms = znorm.gather(state["znorm"], batch["sample_ids"])
         model_batch = {k: v for k, v in batch.items()
                        if k != "sample_ids"}
 
+        new_cache = new_stats = None
         if microbatches == 1:
             loss, aux, gp, gz = grads_of(params, znorms, model_batch, key)
         else:
-            if use_znorm_cache:
-                raise NotImplementedError(
-                    "znorm cache + gradient accumulation: gather/scatter "
-                    "per microbatch instead (trainer-level loop)")
-
             def split(path, x):
                 name = str(path[-1].key) if path else ""
                 bdim = 1 if name == "positions3" else 0
@@ -163,20 +161,64 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
                 return y
 
             mb = jax.tree_util.tree_map_with_path(split, model_batch)
-
-            def acc_step(carry, xs):
-                g_acc, loss_acc = carry
-                mb_i, k_i = xs
-                loss, aux, gp, _ = grads_of(params, None, mb_i, k_i)
-                g_acc = jax.tree.map(
-                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
-                    g_acc, gp)
-                return (g_acc, loss_acc + loss / microbatches), None
-
             g0 = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
             keys = jax.random.split(key, microbatches)
-            (gp, loss), _ = jax.lax.scan(acc_step, (g0, 0.0), (mb, keys))
+
+            if use_znorm_cache:
+                # Per-microbatch gather/scatter: each microbatch reads
+                # the cache columns for ITS sample ids and scatters its
+                # tap back before the next one runs.  Sample ids within
+                # a batch are disjoint, so the result is identical to
+                # gathering everything from the pre-step cache.
+                ids = batch["sample_ids"].reshape(microbatches, -1)
+                seq = (model_batch["tokens"].shape[-1]
+                       if "tokens" in model_batch else None)
+                active = znorm.sampling_active_tags(
+                    policy, state["znorm"], seq_len=seq)
+
+                def acc_step(carry, xs):
+                    g_acc, loss_acc, cache = carry
+                    mb_i, ids_i, k_i = xs
+                    zn_i = znorm.gather(cache, ids_i)
+                    loss, _, gp_i, gz_i = grads_of(params, zn_i, mb_i, k_i)
+                    g_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32)
+                        / microbatches, g_acc, gp_i)
+                    cache = znorm.scatter(cache, ids_i, gz_i,
+                                          active_tags=active)
+                    return (g_acc, loss_acc + loss / microbatches,
+                            cache), gz_i
+
+                carry0 = (g0, 0.0, state["znorm"])
+                (gp, loss, new_cache), taps = jax.lax.scan(
+                    acc_step, carry0, (mb, ids, keys))
+                if "budget_stats" in state:
+                    # ONE stats update per optimizer step, over the full
+                    # batch's taps: the controller EMA/warmup cadence
+                    # must not depend on the microbatch (memory) knob.
+                    # The stat atoms are scale-invariant (normalized),
+                    # so the per-microbatch loss normalization cancels.
+                    tap_full = {
+                        t: jnp.moveaxis(y, 0, 1).reshape(y.shape[1], -1)
+                        for t, y in taps.items()}
+                    budgets = {t: policy.config_for(t).budget
+                               for t in state["budget_stats"]}
+                    new_stats = znorm.update_stats(
+                        state["budget_stats"], tap_full, budgets,
+                        active_tags=active)
+            else:
+                def acc_step(carry, xs):
+                    g_acc, loss_acc = carry
+                    mb_i, k_i = xs
+                    loss, aux, gp, _ = grads_of(params, None, mb_i, k_i)
+                    g_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32)
+                        / microbatches, g_acc, gp)
+                    return (g_acc, loss_acc + loss / microbatches), None
+
+                (gp, loss), _ = jax.lax.scan(acc_step, (g0, 0.0),
+                                             (mb, keys))
             aux, gz = {}, None
 
         lr = schedule(step)
@@ -184,7 +226,11 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
             gp, state["opt"], params, lr, opt_cfg)
         new_state = dict(state, params=new_params, opt=new_opt,
                          step=step + 1)
-        if use_znorm_cache:
+        if use_znorm_cache and microbatches > 1:
+            new_state["znorm"] = new_cache
+            if new_stats is not None:
+                new_state["budget_stats"] = new_stats
+        elif use_znorm_cache:
             seq = (model_batch["tokens"].shape[-1]
                    if "tokens" in model_batch else None)
             active = znorm.sampling_active_tags(policy, state["znorm"],
@@ -206,11 +252,49 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
     return train_step
 
 
-def make_scheduled_train_step(cfg: ArchConfig, policy: cm.Policy,
-                              opt_cfg: optim.AdamWConfig,
-                              schedule: Callable[[jax.Array], jax.Array],
-                              jit: bool = True,
-                              **train_step_kwargs):
+@dataclasses.dataclass
+class ScheduleState:
+    """Host-side, checkpointable state of the scheduled-step driver.
+
+    Everything the driver accumulates across steps lives here — the
+    controller-pinned budget per rule (the hysteresis band position),
+    the re-plan counter, and the budget trajectory log — so a killed
+    run restored through :func:`make_scheduled_train_step`'s
+    ``schedule_state`` argument continues its budget trajectory exactly
+    where it stopped instead of resetting every controller to its
+    initial budget.  ``to_json``/``from_json`` round-trip through the
+    checkpoint manifest's metadata record
+    (``repro.train.checkpoint.pack_run_state``).
+    """
+
+    VERSION = 1
+
+    budgets: Dict[int, float] = dataclasses.field(default_factory=dict)
+    replans: int = 0
+    trajectory: List[dict] = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> dict:
+        return {"version": self.VERSION,
+                "budgets": {str(i): float(b)
+                            for i, b in self.budgets.items()},
+                "replans": int(self.replans),
+                "trajectory": [dict(r) for r in self.trajectory]}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ScheduleState":
+        v = d.get("version")
+        if v != cls.VERSION:
+            raise ValueError(
+                f"schedule-state record version {v!r} is not "
+                f"{cls.VERSION}; this checkpoint was written by an "
+                f"incompatible driver")
+        return cls(budgets={int(i): float(b)
+                            for i, b in d["budgets"].items()},
+                   replans=int(d["replans"]),
+                   trajectory=[dict(r) for r in d["trajectory"]])
+
+
+class ScheduledStepFn:
     """(state, batch) -> (state, metrics) with budget schedules AND
     adaptive budget controllers resolved against the live step counter.
 
@@ -230,58 +314,101 @@ def make_scheduled_train_step(cfg: ArchConfig, policy: cm.Policy,
     policy via ``with_rule_budgets`` so the compiled step sees a plain
     static budget; re-planning (a new signature -> ``plans.build_plan``
     shapes change -> compile) happens exactly when a controller crosses
-    its hysteresis band.  Introspection attributes:
+    its hysteresis band.
+
+    All cross-step driver state lives in ``self.schedule_state`` (a
+    :class:`ScheduleState`): pass a restored one to resume a killed run
+    with its band positions and trajectory intact.  Introspection:
 
       * ``step_fn.compiled``           — signature -> compiled step
       * ``step_fn.replans``            — controller-driven budget changes
       * ``step_fn.budget_trajectory``  — [{step, rule, budget, prev}, ...]
-        (initial pins carry ``prev=None`` and do not count as re-plans)
+        (initial pins carry ``prev=None``, are logged on the first
+        invocation at whatever step that is, and do not count as
+        re-plans)
     """
-    compiled: Dict[tuple, Callable] = {}
-    rules = policy.rules.rules if policy.rules is not None else ()
-    ctrl_idx = (policy.rules.controller_rule_indices()
-                if policy.rules is not None else ())
-    # same default-first base config as PolicyRules.resolve/signature
-    base_cfg = (policy.rules.default
-                if policy.rules is not None
-                and policy.rules.default is not None else policy.wtacrs)
-    current: Dict[int, float] = {
-        i: rules[i].controller.initial_budget(
-            rules[i].static_budget(base_cfg))
-        for i in ctrl_idx}
-    stats_needed = any(getattr(rules[i].controller, "needs_stats", True)
-                       for i in ctrl_idx)
-    if stats_needed and not train_step_kwargs.get("use_znorm_cache"):
-        # without the cache the tap never refreshes budget_stats: every
-        # count stays 0, controllers hold forever, and the "adaptive"
-        # run silently trains at its initial budget — fail loudly now
-        raise ValueError(
-            "policy has stats-driven budget-controller rules; pass "
-            "use_znorm_cache=True (and init the state with znorm_tags "
-            "and budget_stats=True) so the tap statistics they feed on "
-            "actually update")
-    # tags GOVERNED by each controller rule under first-match-wins —
-    # a bare pattern match would also feed a controller stats from tags
-    # an earlier rule owns.  Stat keys are fixed per state structure, so
-    # resolve once.
-    owned_tags: Dict[int, list] = {}
 
-    def _owned(stats_keys):
-        if not owned_tags:
-            owned_tags.update({i: [] for i in ctrl_idx})
+    def __init__(self, cfg: ArchConfig, policy: cm.Policy,
+                 opt_cfg: optim.AdamWConfig,
+                 schedule: Callable[[jax.Array], jax.Array],
+                 jit: bool = True,
+                 schedule_state: Optional[ScheduleState] = None,
+                 **train_step_kwargs):
+        self._cfg = cfg
+        self._policy = policy
+        self._opt_cfg = opt_cfg
+        self._schedule = schedule
+        self._jit = jit
+        self._train_step_kwargs = train_step_kwargs
+        self.compiled: Dict[tuple, Callable] = {}
+
+        rules = policy.rules.rules if policy.rules is not None else ()
+        self._rules = rules
+        self._ctrl_idx = (policy.rules.controller_rule_indices()
+                          if policy.rules is not None else ())
+        # same default-first base config as PolicyRules.resolve/signature
+        base_cfg = (policy.rules.default
+                    if policy.rules is not None
+                    and policy.rules.default is not None else policy.wtacrs)
+        self.schedule_state = (schedule_state if schedule_state is not None
+                               else ScheduleState())
+        if not self.schedule_state.budgets:
+            self.schedule_state.budgets = {
+                i: rules[i].controller.initial_budget(
+                    rules[i].static_budget(base_cfg))
+                for i in self._ctrl_idx}
+        elif set(self.schedule_state.budgets) != set(self._ctrl_idx):
+            raise ValueError(
+                f"restored schedule state pins budgets for controller "
+                f"rules {sorted(self.schedule_state.budgets)} but the "
+                f"policy's controller rules are "
+                f"{sorted(self._ctrl_idx)}; the policy changed between "
+                f"save and restore")
+        self._stats_needed = any(
+            getattr(rules[i].controller, "needs_stats", True)
+            for i in self._ctrl_idx)
+        if self._stats_needed and not train_step_kwargs.get(
+                "use_znorm_cache"):
+            # without the cache the tap never refreshes budget_stats:
+            # every count stays 0, controllers hold forever, and the
+            # "adaptive" run silently trains at its initial budget —
+            # fail loudly now
+            raise ValueError(
+                "policy has stats-driven budget-controller rules; pass "
+                "use_znorm_cache=True (and init the state with "
+                "znorm_tags and budget_stats=True) so the tap "
+                "statistics they feed on actually update")
+        # tags GOVERNED by each controller rule under first-match-wins —
+        # a bare pattern match would also feed a controller stats from
+        # tags an earlier rule owns.  Stat keys are fixed per state
+        # structure, so resolve once.
+        self.owned_tags: Dict[int, list] = {}
+
+    @property
+    def replans(self) -> int:
+        return self.schedule_state.replans
+
+    @property
+    def budget_trajectory(self) -> List[dict]:
+        return self.schedule_state.trajectory
+
+    def _owned(self, stats_keys):
+        if not self.owned_tags:
+            self.owned_tags.update({i: [] for i in self._ctrl_idx})
             for t in stats_keys:
-                for i, r in enumerate(rules):
+                for i, r in enumerate(self._rules):
                     if r.matches(t):
-                        if i in owned_tags:
-                            owned_tags[i].append(t)
+                        if i in self.owned_tags:
+                            self.owned_tags[i].append(t)
                         break
-        return owned_tags
+        return self.owned_tags
 
-    def step_fn(state, batch):
+    def __call__(self, state, batch):
         step = int(state["step"])
+        st = self.schedule_state
         rule_budgets = None
-        if ctrl_idx:
-            if stats_needed and "budget_stats" not in state:
+        if self._ctrl_idx:
+            if self._stats_needed and "budget_stats" not in state:
                 raise ValueError(
                     "policy has stats-driven budget-controller rules "
                     "but the train state carries no 'budget_stats'; "
@@ -291,43 +418,57 @@ def make_scheduled_train_step(cfg: ArchConfig, policy: cm.Policy,
                     "use_znorm_cache=True")
             stats_host = (jax.device_get(state["budget_stats"])
                           if "budget_stats" in state else {})
-            owned = _owned(stats_host.keys())
-            for i in ctrl_idx:
-                r = rules[i]
+            owned = self._owned(stats_host.keys())
+            for i in self._ctrl_idx:
+                r = self._rules[i]
                 agg = controller_lib.TagStats.aggregate(stats_host,
                                                         tags=owned[i])
-                nb = float(r.controller.propose(agg, current[i], step))
-                if step == 0 and not any(
-                        rec["rule"] == i
-                        for rec in step_fn.budget_trajectory):
-                    step_fn.budget_trajectory.append(
-                        {"step": 0, "rule": i, "pattern": r.pattern,
-                         "budget": current[i], "prev": None})
-                if nb != current[i]:
-                    step_fn.replans += 1
-                    step_fn.budget_trajectory.append(
+                nb = float(r.controller.propose(agg, st.budgets[i], step))
+                if not any(rec["rule"] == i for rec in st.trajectory):
+                    # initial pin, logged on the FIRST invocation at
+                    # whatever step that happens (a resumed run without
+                    # a restored trajectory still records its baseline)
+                    st.trajectory.append(
                         {"step": step, "rule": i, "pattern": r.pattern,
-                         "budget": nb, "prev": current[i]})
-                    current[i] = nb
-            rule_budgets = tuple(current.get(i) for i in range(len(rules)))
-        pol = policy.at_step(step)
+                         "budget": st.budgets[i], "prev": None})
+                if nb != st.budgets[i]:
+                    st.replans += 1
+                    st.trajectory.append(
+                        {"step": step, "rule": i, "pattern": r.pattern,
+                         "budget": nb, "prev": st.budgets[i]})
+                    st.budgets[i] = nb
+            rule_budgets = tuple(st.budgets.get(i)
+                                 for i in range(len(self._rules)))
+        pol = self._policy.at_step(step)
         if rule_budgets is not None:
             pol = pol.with_rule_budgets(rule_budgets)
         sig = pol.schedule_signature()
-        fn = compiled.get(sig)
+        fn = self.compiled.get(sig)
         if fn is None:
-            fn = make_train_step(cfg, pol, opt_cfg, schedule,
-                                 **train_step_kwargs)
-            if jit:
+            fn = make_train_step(self._cfg, pol, self._opt_cfg,
+                                 self._schedule,
+                                 **self._train_step_kwargs)
+            if self._jit:
                 fn = jax.jit(fn)
-            compiled[sig] = fn
+            self.compiled[sig] = fn
         return fn(state, batch)
 
-    step_fn.compiled = compiled     # introspection: one entry per plateau
-    step_fn.replans = 0
-    step_fn.budget_trajectory = []
-    step_fn.owned_tags = owned_tags  # rule idx -> stat tags it governs
-    return step_fn
+
+def make_scheduled_train_step(cfg: ArchConfig, policy: cm.Policy,
+                              opt_cfg: optim.AdamWConfig,
+                              schedule: Callable[[jax.Array], jax.Array],
+                              jit: bool = True,
+                              schedule_state: Optional[ScheduleState] = None,
+                              **train_step_kwargs) -> ScheduledStepFn:
+    """Build a :class:`ScheduledStepFn` (see its docstring).
+
+    ``schedule_state``: a restored :class:`ScheduleState` to resume a
+    controller-carrying run bit-faithfully; ``None`` starts fresh at
+    every controller's initial budget.
+    """
+    return ScheduledStepFn(cfg, policy, opt_cfg, schedule, jit=jit,
+                           schedule_state=schedule_state,
+                           **train_step_kwargs)
 
 
 def make_prefill_step(cfg: ArchConfig, policy: cm.Policy):

@@ -356,13 +356,13 @@ class Ctx:
             for i, w in enumerate(ws):
                 bias = None if biases is None else biases[i]
                 outs.append(wtacrs_linear(
-                    h, w, key=self._key_for(tags[i]),
+                    h, w, key=self._key_for(full_tags[i]),
                     znorm=self._znorm_for(full_tags[i], h),
                     cfg=cfgs[i], bias=bias))
             return tuple(outs)
         from repro.core.linear import wtacrs_linear_shared
         return wtacrs_linear_shared(
-            h, ws, key=self._key_for("+".join(tags)), znorm=zn,
+            h, ws, key=self._key_for("+".join(full_tags)), znorm=zn,
             cfg=cfgs[0], biases=biases)
 
     def fold(self, i) -> "Ctx":

@@ -97,6 +97,62 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> Dict:
+    """The manifest of one checkpoint (latest when ``step`` is None)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Versioned run-state record (host-side driver state riding the manifest)
+# ---------------------------------------------------------------------------
+#
+# Array state (params, opt, znorm cache, budget_stats) lives in
+# arrays.npz; everything host-side a run needs to resume bit-faithfully
+# — the scheduled-step driver's controller band positions and budget
+# trajectory, plus whatever the caller adds — rides the manifest's
+# ``metadata`` under one versioned key, so an old reader confronted with
+# a future record fails loudly instead of resuming with silently reset
+# controllers.
+
+RUN_STATE_KEY = "run_state"
+RUN_STATE_VERSION = 1
+
+
+def pack_run_state(schedule_state: Optional[Dict] = None,
+                   **extra) -> Dict:
+    """Metadata dict for ``save``: a versioned run-state record.
+
+    ``schedule_state``: the JSON form of a driver ``ScheduleState``
+    (``launch.train_steps.ScheduleState.to_json()``); ``extra`` keys are
+    stored alongside it (must be JSON-serializable)."""
+    rec = {"version": RUN_STATE_VERSION, **extra}
+    if schedule_state is not None:
+        rec["schedule_state"] = schedule_state
+    return {RUN_STATE_KEY: rec}
+
+
+def unpack_run_state(manifest: Dict) -> Optional[Dict]:
+    """The run-state record of a manifest (``read_manifest`` result), or
+    ``None`` when the checkpoint carries none (pre-façade writer).
+    Raises on a version this reader does not understand."""
+    rec = manifest.get("metadata", {}).get(RUN_STATE_KEY)
+    if rec is None:
+        return None
+    v = rec.get("version")
+    if v != RUN_STATE_VERSION:
+        raise ValueError(
+            f"checkpoint run-state record version {v!r} is not "
+            f"{RUN_STATE_VERSION}; refusing to resume from an "
+            f"incompatible writer")
+    return rec
+
+
 def restore(ckpt_dir: str, template, step: Optional[int] = None
             ) -> Tuple[Any, int]:
     """Restore into the structure of ``template`` (shapes must match)."""

@@ -42,6 +42,32 @@ class SyntheticLM:
         return {"tokens": toks[:, :-1].astype(np.int32),
                 "labels": toks[:, 1:].astype(np.int32)}
 
+    def steps_per_epoch(self, batch_size: int, n_hosts: int = 1) -> int:
+        return (self.n_samples // n_hosts) // batch_size
+
+    def batch_at(self, step: int, batch_size: int, *, host_id: int = 0,
+                 n_hosts: int = 1) -> Dict[str, np.ndarray]:
+        """The batch a sequential trainer sees at global ``step`` —
+        stateless and deterministic, so a killed-and-resumed run replays
+        exactly the batches the uninterrupted run would have seen
+        (epoch ``step // steps_per_epoch`` is shuffled with its epoch
+        index as the seed; within an epoch, consecutive slices)."""
+        per = self.steps_per_epoch(batch_size, n_hosts)
+        if per < 1:
+            raise ValueError(
+                f"batch_size {batch_size} x {n_hosts} hosts exceeds "
+                f"n_samples {self.n_samples}")
+        epoch, pos = divmod(int(step), per)
+        cache_key = (epoch, host_id, n_hosts)
+        if getattr(self, "_order_cache_key", None) != cache_key:
+            order = np.random.RandomState(epoch).permutation(
+                self.n_samples)[host_id::n_hosts]
+            self._order_cache_key, self._order_cache = cache_key, order
+        ids = self._order_cache[pos * batch_size:(pos + 1) * batch_size]
+        b = self.batch(ids)
+        b["sample_ids"] = ids.astype(np.int32)
+        return b
+
     def epoch(self, batch_size: int, *, shuffle_seed: int = 0,
               host_id: int = 0, n_hosts: int = 1
               ) -> Iterator[Dict[str, np.ndarray]]:

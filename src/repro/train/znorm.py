@@ -32,11 +32,46 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import plans
-from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.core.config import EstimatorKind, NormSource, WTACRSConfig
 from repro.models import common as cm
 from repro.models import registry
 
 _EPS = 1e-20
+
+
+def policy_requirements(policy: cm.Policy) -> Dict[str, bool]:
+    """What a policy demands of the train state / step builder.
+
+    Returns ``{"cached_grad": ..., "stats_controllers": ...}``:
+
+      * ``cached_grad`` — some reachable estimator config sets
+        ``norm_source=CACHED_GRAD``, i.e. the dataset gradient-norm
+        cache must exist and be threaded through the step
+        (``use_znorm_cache=True``) for the config to mean anything.
+      * ``stats_controllers`` — some rule carries a stats-driven budget
+        controller, i.e. the state additionally needs ``budget_stats``
+        (and the cache, which feeds them through the tap).
+
+    Reachable configs are the fallback (``policy.wtacrs``), the rules'
+    ``default``, and every rule resolved at step 0 — ``norm_source`` is
+    never schedule-dependent, so step 0 sees every value that can occur.
+    """
+    cfgs = [policy.wtacrs]
+    stats_controllers = False
+    if policy.rules is not None:
+        base = (policy.rules.default
+                if policy.rules.default is not None else policy.wtacrs)
+        cfgs.append(base)
+        for r in policy.rules.rules:
+            cfgs.append(r.resolve(base, step=0))
+            if (r.controller is not None
+                    and getattr(r.controller, "needs_stats", True)):
+                stats_controllers = True
+    cached = any(not c.is_exact
+                 and c.norm_source == NormSource.CACHED_GRAD
+                 for c in cfgs)
+    return {"cached_grad": cached,
+            "stats_controllers": stats_controllers}
 
 
 def collect_linear_tags(cfg, policy: Optional[cm.Policy] = None

@@ -193,6 +193,34 @@ class TestMixedPolicyForwardBackward:
         g = jax.grad(f)(tuple(ws))
         assert all(np.isfinite(np.asarray(gi)).all() for gi in g)
 
+    def test_shared_fallback_decorrelates_across_tag_prefixes(self):
+        """Regression: the per-weight fallback folded the PRNG key with
+        the UNPREFIXED tag, so identical layer names in different blocks
+        (same ctx key, different tag_prefix) drew the SAME plan."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 8))
+        ws = [jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(1),
+                                                   i), (8, 8)) * 0.3
+              for i in range(2)]
+        pol = cm.Policy(
+            wtacrs=WTACRSConfig(budget=0.25, min_rows=4),
+            rules=PolicyRules.of(("*attn_q", EXACT_CONFIG)))
+
+        def grads_for(prefix):
+            def f(wss):
+                ctx = cm.Ctx(policy=pol, key=jax.random.PRNGKey(5),
+                             tag_prefix=prefix)
+                a, b = ctx.linear_shared(("attn_q", "attn_k"), x,
+                                         list(wss))
+                return jnp.sum(jnp.sin(a) + jnp.sin(b))
+            return jax.grad(f)(tuple(ws))
+
+        g0, g1 = grads_for("b0/"), grads_for("b1/")
+        # exact-ruled attn_q: identical plans are irrelevant (dense grad)
+        np.testing.assert_array_equal(np.asarray(g0[0]),
+                                      np.asarray(g1[0]))
+        # sampled attn_k must draw an independent plan per block
+        assert not np.array_equal(np.asarray(g0[1]), np.asarray(g1[1]))
+
 
 # ---------------------------------------------------------------------------
 # Registry round-trip
