@@ -1,0 +1,76 @@
+"""Gate a fresh BENCH_serving.json against the checked-in baseline.
+
+    python benchmarks/check_serving_baseline.py \
+        bench-artifacts/BENCH_serving.json \
+        benchmarks/baselines/BENCH_serving.json
+
+Absolute timings vary with runner hardware, so the check is structural:
+
+* the artifact carries the baseline's full schema (every key, both
+  serving variants, throughput + p50/p99 latency) with finite positive
+  measurements — a refactor that silently drops a metric fails here;
+* the trace configuration matches the baseline (same workload measured);
+* the acceptance gate holds: continuous batching strictly beats
+  sequential serving on requests/s (``speedup_rps > 1``), on ANY
+  hardware, because batching K decodes into one device step must outrun
+  K sequential steps.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+CONFIG_KEYS = ("arch", "n_requests", "max_slots", "prompt_len",
+               "gen_range", "page_size", "max_len", "prefill_chunk",
+               "offered_rps")
+MEASURE_KEYS = ("requests_per_s", "tokens_per_s", "p50_ms", "p99_ms",
+                "makespan_s", "occupancy")
+
+
+def check(artifact: dict, baseline: dict) -> list:
+    errors = []
+    for k in CONFIG_KEYS:
+        if k not in artifact:
+            errors.append(f"missing config key {k!r}")
+        elif artifact[k] != baseline[k]:
+            errors.append(f"config drift: {k} = {artifact[k]!r} but "
+                          f"baseline measured {baseline[k]!r}")
+    for variant in ("continuous", "sequential"):
+        block = artifact.get(variant)
+        if not isinstance(block, dict):
+            errors.append(f"missing {variant!r} measurements")
+            continue
+        for k in MEASURE_KEYS:
+            v = block.get(k)
+            if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                    or v <= 0:
+                errors.append(f"{variant}.{k} = {v!r} (want finite > 0)")
+    sp = artifact.get("speedup_rps")
+    if not isinstance(sp, (int, float)) or not sp > 1.0:
+        errors.append(f"speedup_rps = {sp!r}: continuous batching must "
+                      f"strictly beat sequential serving")
+    return errors
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} <fresh BENCH_serving.json> "
+                 f"<baseline json>")
+    with open(sys.argv[1]) as f:
+        artifact = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+    errors = check(artifact, baseline)
+    if errors:
+        for e in errors:
+            print(f"BASELINE CHECK FAILED: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"serving baseline ok: speedup x{artifact['speedup_rps']:.2f} "
+          f"(continuous {artifact['continuous']['requests_per_s']:.1f} "
+          f"req/s vs sequential "
+          f"{artifact['sequential']['requests_per_s']:.1f} req/s)")
+
+
+if __name__ == "__main__":
+    main()

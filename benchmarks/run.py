@@ -12,6 +12,8 @@ gates regressions.
                        (estimator ablation), fixed-vs-adaptive budgets
   bench_latency     -- Table 3 (linear fwd/bwd latency)
   bench_roofline    -- roofline terms per (arch x shape x mesh) cell
+  bench_serving     -- continuous batching vs sequential: requests/s,
+                       p50/p99 latency under a Poisson open-loop trace
 """
 import argparse
 import importlib
@@ -26,7 +28,7 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 MODULES = ["bench_estimators", "bench_memory", "bench_convergence",
-           "bench_latency", "bench_roofline"]
+           "bench_latency", "bench_roofline", "bench_serving"]
 
 
 def main() -> None:

@@ -1,57 +1,70 @@
-"""Serve a model: batched prefill + greedy decode with KV/SSM caches.
+"""Serve a model: continuous batching through the slot-pool session.
 
     PYTHONPATH=src python examples/serve_decode.py --arch zamba2-2.7b \
-        --batch 4 --prompt-len 32 --gen 24
+        --requests 6 --prompt-len 12 --gen 16
 
-Exercises the production serve path through the Run façade: a RunSpec
-names the arch, ``run.prefill`` streams the prompt batch into
-headroom-sized caches, and ``run.decode`` steps out a batch of greedy
-continuations.
+Exercises the production serving path end-to-end: ``ServeSpec`` fixes
+the pool geometry (and rejects unservable archs — e.g. ``--arch
+whisper-base`` — at construction, with the reason, before any device
+work), ``Run.serve()`` opens a :class:`repro.serve.ServeSession` on the
+run's params, and the async host loop admits a burst of ragged requests
+into the paged cache pool, interleaving chunked prefill with batched
+decode.  Finishes by printing the session's §Serving report.
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.api import Run, RunSpec
-from repro.configs import get_config
+from repro.api import Run, RunSpec, ServeSpec
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="zamba2-2.7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--full-size", action="store_true")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=not args.full_size)
-    if cfg.is_encdec:
-        raise SystemExit("use an LM arch for this example")
+    # construction-time validation: unknown arch, enc-dec, or impossible
+    # geometry all fail HERE, not hundreds of steps into a live service
+    spec = ServeSpec(arch=args.arch, reduced=not args.full_size,
+                     max_slots=args.slots, page_size=args.page_size,
+                     max_len=args.prompt_len + args.gen,
+                     prefill_chunk=args.prefill_chunk,
+                     top_k=8 if args.temperature > 0 else 0)
+
     run = Run(RunSpec(arch=args.arch, reduced=not args.full_size,
                       seed=0)).init()
-
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size, jnp.int32)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, run.cfg.vocab_size,
+                            size=rng.integers(2, args.prompt_len + 1))
+               for _ in range(args.requests)]
+    gens = [int(rng.integers(max(1, args.gen // 2), args.gen + 1))
+            for _ in range(args.requests)]
 
     t0 = time.perf_counter()
-    tok, pos, states = run.prefill(prompts, gen=args.gen)
-    print(f"prefill {args.prompt_len} tokens x {args.batch} reqs: "
-          f"{time.perf_counter() - t0:.2f}s")
-
-    out = []
-    t0 = time.perf_counter()
-    for t in range(pos, pos + args.gen):
-        tok, logits, states = run.decode(tok, t, states)
-        out.append(tok)
-    dt = time.perf_counter() - t0
-    gen = jnp.stack(out, axis=1)
-    print(f"decoded {args.gen} x {args.batch} tokens in {dt:.2f}s "
-          f"({args.gen * args.batch / dt:.1f} tok/s on this host)")
-    print("sample continuation ids:", gen[0][:12].tolist())
+    with run.serve(spec).start() as sess:
+        handles = [sess.submit(p, max_new=g,
+                               temperature=args.temperature, seed=0)
+                   for p, g in zip(prompts, gens)]
+        for i, h in enumerate(handles):
+            toks = h.result(timeout=600)
+            print(f"req {i}: prompt[{len(prompts[i])}] -> "
+                  f"{len(toks)} tokens: {toks[:12]}"
+                  + (" ..." if len(toks) > 12 else ""))
+        dt = time.perf_counter() - t0
+        n_tok = sum(gens)
+        print(f"\nserved {args.requests} ragged requests / {n_tok} "
+              f"tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s incl. "
+              f"compile)\n")
+        print(sess.report())
 
 
 if __name__ == "__main__":

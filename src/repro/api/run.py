@@ -19,6 +19,7 @@ resume; it now rides the checkpoint manifest as a versioned record).
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Any, Dict, List, Optional
 
@@ -61,6 +62,8 @@ class Run:
         self.schedule_state = train_steps.ScheduleState()
         self._step_fn: Optional[train_steps.ScheduledStepFn] = None
         self._serve_fn = None
+        self._prefill_fns: Dict[int, Any] = {}
+        self._sample_fn = None
         self._async_ckpt: Optional[checkpoint.AsyncCheckpointer] = None
         self._dryrun_rec: Optional[dict] = None
 
@@ -247,19 +250,35 @@ class Run:
             self._serve_fn = jax.jit(fn) if self.spec.jit else fn
         return self._serve_fn
 
+    def _prefill_chunk_fn(self, chunk_len: int):
+        fn = self._prefill_fns.get(chunk_len)
+        if fn is None:
+            fn = train_steps.make_prefill_chunk_step(
+                self.cfg, self.policy, chunk_len)
+            if self.spec.jit:
+                fn = jax.jit(fn)
+            self._prefill_fns[chunk_len] = fn
+        return fn
+
     def prefill(self, prompts, gen: int = 0):
-        """Stream a (B, S) prompt batch through serve steps into decode
-        caches with ``S + gen`` token headroom.  Returns
+        """Stream a (B, S) prompt batch into decode caches with
+        ``S + gen`` token headroom, ``spec.prefill_chunk`` tokens per
+        jitted call (a scan of decode steps — bit-identical to the old
+        one-call-per-token loop, minus S dispatches).  Returns
         ``(last_token, pos, states)`` ready for :meth:`decode`."""
         self.init()
         prompts = jnp.asarray(prompts)
-        serve = self._serve()
+        s = prompts.shape[1]
         states = registry.decode_state_init(
-            self.cfg, prompts.shape[0], prompts.shape[1] + gen)
-        for t in range(prompts.shape[1] - 1):
-            _, _, states = serve(self.state["params"], prompts[:, t],
-                                 jnp.asarray(t), states)
-        return prompts[:, -1], prompts.shape[1] - 1, states
+            self.cfg, prompts.shape[0], s + gen)
+        t, chunk = 0, self.spec.prefill_chunk
+        while t < s - 1:
+            n = min(chunk, s - 1 - t)
+            states = self._prefill_chunk_fn(n)(
+                self.state["params"], prompts[:, t:t + n],
+                jnp.asarray(t), states)
+            t += n
+        return prompts[:, -1], s - 1, states
 
     def decode(self, token, pos, states):
         """One greedy decode step: ``(next_token, logits, states)``."""
@@ -267,14 +286,63 @@ class Run:
         return self._serve()(self.state["params"], token,
                              jnp.asarray(pos), states)
 
-    def generate(self, prompts, gen: int) -> jax.Array:
-        """Greedy continuation: (B, S) prompts -> (B, gen) token ids."""
+    def generate(self, prompts, gen: int, temperature: float = 0.0,
+                 seed: int = 0, top_k: int = 0) -> jax.Array:
+        """Continuation: (B, S) prompts -> (B, gen) token ids.
+
+        ``temperature == 0`` (default) is greedy argmax; > 0 samples,
+        optionally ``top_k``-truncated, deterministically under a fixed
+        ``seed``.  Randomness is keyed per (seed, row, step) through
+        ``repro.serve.sampling``, the SAME keying the continuous-batching
+        service uses with the batch row as request uid — so a request
+        served through a churning slot pool reproduces bit-identically
+        here with its uid as row index."""
+        from repro.serve import sampling
         tok, pos, states = self.prefill(prompts, gen=gen)
+        b = prompts.shape[0]
+        base = jnp.stack([sampling.request_key(seed, r)
+                          for r in range(b)])
+        temp = jnp.full((b,), temperature, jnp.float32)
+        if self._sample_fn is None or self._sample_fn[0] != top_k:
+            fn = functools.partial(sampling.sample_logits, top_k=top_k)
+            self._sample_fn = (top_k,
+                               jax.jit(fn) if self.spec.jit else fn)
+        sample = self._sample_fn[1]
         out = []
-        for t in range(pos, pos + gen):
-            tok, _, states = self.decode(tok, t, states)
+        for g, t in enumerate(range(pos, pos + gen)):
+            _, logits, states = self.decode(tok, t, states)
+            keys = sampling.step_keys(base, jnp.full((b,), g, jnp.int32))
+            tok = sample(logits, keys, temp)
             out.append(tok)
         return jnp.stack(out, axis=1)
+
+    def serve(self, spec: Optional["ServeSpec"] = None, **overrides):
+        """Open a continuous-batching :class:`~repro.serve.ServeSession`
+        on this run's params.
+
+        ``spec``: a full :class:`~repro.api.spec.ServeSpec`; or pass
+        field overrides (``max_slots=8, page_size=16, ...``) and one is
+        built on this run's (arch, reduced, policy).  Start the async
+        loop and submit::
+
+            with run.serve(max_slots=4).start() as sess:
+                tokens = sess.submit(prompt, max_new=16).result(60)
+        """
+        from repro.serve import ServeSession
+        from repro.serve.spec import ServeSpec
+        self.init()
+        if spec is None:
+            overrides.setdefault("arch", self.spec.arch)
+            overrides.setdefault("reduced", self.spec.reduced)
+            overrides.setdefault("policy", self.policy)
+            overrides.setdefault("prefill_chunk", self.spec.prefill_chunk)
+            overrides.setdefault("jit", self.spec.jit)
+            spec = ServeSpec(**overrides)
+        elif overrides:
+            raise ValueError("pass either a ServeSpec or field "
+                             "overrides, not both")
+        return ServeSession(spec, self.state["params"],
+                            policy=self.policy)
 
     # ------------------------------------------------------------------
     # analysis

@@ -21,6 +21,7 @@ from typing import Optional, Tuple
 
 from repro.core.policy import PolicyRules  # noqa: F401  (re-export conv.)
 from repro.models import common as cm
+from repro.serve.spec import ServeSpec  # noqa: F401  (re-export conv.)
 from repro.train import data as data_lib
 from repro.train import optim, znorm
 
@@ -106,9 +107,13 @@ class RunSpec:
     data_axes: Optional[Tuple[str, ...]] = None
     jit: bool = True
 
+    prefill_chunk: int = 16            # prompt tokens per jitted prefill
+
     def __post_init__(self):
         if self.steps < 1:
             raise ValueError("need steps >= 1")
+        if self.prefill_chunk < 1:
+            raise ValueError("need prefill_chunk >= 1")
         if self.batch_size < 1 or self.microbatches < 1:
             raise ValueError("need batch_size >= 1 and microbatches >= 1")
         if self.batch_size % self.microbatches:

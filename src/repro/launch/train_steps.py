@@ -486,6 +486,124 @@ def make_serve_step(cfg: ArchConfig, policy: cm.Policy):
     return serve_step
 
 
+def make_prefill_chunk_step(cfg: ArchConfig, policy: cm.Policy,
+                            chunk_len: int):
+    """Prefill ``chunk_len`` prompt tokens for an aligned batch in ONE
+    jitted call: a ``lax.scan`` of ``registry.decode_step`` over the
+    chunk.  Bit-identical to the old one-jitted-call-per-token loop (the
+    exact same decode steps run in the exact same order) but with the
+    per-token dispatch overhead amortized ``chunk_len``-fold.  One
+    compile per distinct chunk length; ``Run.prefill`` slices prompts
+    into full chunks + one remainder, so at most two compiles per
+    prompt length class."""
+
+    def chunk_step(params, tokens, start, states):
+        # tokens: (B, chunk_len); start: scalar position of tokens[:, 0]
+
+        def body(carry, xs):
+            states = carry
+            tok, off = xs
+            _, states = registry.decode_step(
+                cfg, params, tok, start + off, states, policy)
+            return states, None
+
+        states, _ = jax.lax.scan(
+            body, states,
+            (jnp.moveaxis(tokens, 1, 0), jnp.arange(chunk_len)))
+        return states
+
+    return chunk_step
+
+
+# ---------------------------------------------------------------------------
+# Slot-pool serving steps (continuous batching; see repro.serve)
+# ---------------------------------------------------------------------------
+
+def make_slot_serve_step(cfg: ArchConfig, policy: cm.Policy,
+                         top_k: int = 0):
+    """One batched decode step over the whole slot pool.
+
+    Gathers every slot's paged KV into contiguous decode-layout caches,
+    runs ONE ``decode_step`` with per-slot positions (the heterogeneous
+    batch: every row at its own ``pos``), samples next tokens with
+    per-request keys/temperatures, and scatters each row's written K/V
+    token back into its own page (inactive rows land on the scratch
+    page, recurrent state holds under the ``active`` mask).
+
+    Signature: ``(params, pool, page_table, token, pos, active, keys,
+    n_gen, temperature) -> (next_token, logits, pool)`` — all dynamic,
+    so one compile serves every batch composition."""
+    from repro.serve import pool as pool_lib
+    from repro.serve import sampling as sampling_lib
+
+    def slot_serve_step(params, pool, page_table, token, pos, active,
+                        keys, n_gen, temperature):
+        states = pool_lib.gather_decode_states(cfg, pool, page_table)
+        logits, new_states = registry.decode_step(
+            cfg, params, token, pos, states, policy)
+        ks = sampling_lib.step_keys(keys, n_gen)
+        next_token = sampling_lib.sample_logits(logits, ks, temperature,
+                                                top_k=top_k)
+        pool = pool_lib.scatter_decode_update(
+            cfg, pool, new_states, page_table, pos, active)
+        return next_token, logits, pool
+
+    return slot_serve_step
+
+
+def make_slot_prefill_step(cfg: ArchConfig, policy: cm.Policy,
+                           chunk_len: int, fresh: bool):
+    """Prefill ``chunk_len`` prompt tokens for ONE slot of the pool.
+
+    Gathers the slot's decode-layout state (batch = 1), scans
+    ``decode_step`` over the chunk — numerically identical to the
+    aligned-batch prefill and to token-by-token decode, so chunk size
+    never changes served tokens — and scatters the state back into the
+    slot's pages.  ``fresh`` (static) marks a request's FIRST chunk:
+    recurrent state starts from the block init constants instead of the
+    evicted predecessor's leftovers (stale KV needs no reset; attention
+    masks beyond the slot's live length)."""
+    from repro.serve import pool as pool_lib
+
+    def slot_prefill_step(params, pool, page_table_row, slot, tokens,
+                          start):
+        # tokens: (chunk_len,); start: scalar position of tokens[0]
+        states = pool_lib.gather_slot_states(cfg, pool, page_table_row,
+                                             slot, fresh)
+
+        def body(carry, xs):
+            states = carry
+            tok, off = xs
+            _, states = registry.decode_step(
+                cfg, params, tok[None], start + off, states, policy)
+            return states, None
+
+        states, _ = jax.lax.scan(body, states,
+                                 (tokens, jnp.arange(chunk_len)))
+        pool = pool_lib.scatter_slot_states(cfg, pool, states,
+                                            page_table_row, slot)
+        return pool
+
+    return slot_prefill_step
+
+
+def make_slot_reset_step(cfg: ArchConfig):
+    """Reset one slot's recurrent state to the block init constants.
+
+    Needed for single-token prompts (zero prefill chunks run before the
+    first decode step, so nothing else would clear the evicted
+    predecessor's conv/SSM state out of the slot)."""
+    from repro.serve import pool as pool_lib
+
+    def slot_reset_step(pool, page_table_row, slot):
+        states = pool_lib.gather_slot_states(cfg, pool, page_table_row,
+                                             slot, fresh=True)
+        return pool_lib.scatter_slot_states(cfg, pool, states,
+                                            page_table_row, slot)
+
+    return slot_reset_step
+
+
 # ---------------------------------------------------------------------------
 # shard_map DP step with explicit (compressed) gradient all-reduce
 # ---------------------------------------------------------------------------

@@ -191,7 +191,18 @@ def prime_cross_cache(cfg, params, frames, policy):
 def decode_step(cfg: ArchConfig, params, token, pos, state,
                 policy: cm.Policy):
     """token (B,) -> logits (B, V); state from decode_state_init (+primed
-    cross caches)."""
+    cross caches).
+
+    ``pos`` must be a shared scalar: enc-dec decode is keyed to one
+    primed cross-attention cache per batch, so ragged per-slot positions
+    (continuous batching) are not supported — ``repro.serve.ServeSpec``
+    rejects enc-dec archs at construction for this reason.
+    """
+    if jnp.ndim(pos) > 0:
+        raise NotImplementedError(
+            "enc-dec decode takes one shared scalar position (the batch "
+            "is aligned to a single primed cross-attention cache); "
+            "per-slot ragged positions are a decoder-only-LM feature")
     ctx = cm.Ctx(policy=policy, key=None, compute_dtype=cfg.cdtype)
     b = token.shape[0]
     h = jnp.take(params["embed"], token, axis=0)[:, None, :].astype(

@@ -344,7 +344,14 @@ def prefill(cfg: ArchConfig, params, batch, policy: cm.Policy):
 # Decode (single-token serve step with per-block state)
 # ---------------------------------------------------------------------------
 
-def _block_decode_init(cfg, btype, batch_size, max_len):
+def block_decode_init(cfg, btype, batch_size, max_len):
+    """Decode state for ONE block type, un-stacked (no repeat axis).
+
+    Attention blocks get a (B, max_len, KVH, Dh) KV cache; recurrent
+    blocks get their O(1) per-sequence state.  The serving slot pool
+    builds its per-block pools from this (KV paged, SSM slot-indexed),
+    so it is the public per-block counterpart of ``decode_state_init``.
+    """
     kvh, dh = cfg.n_kv_heads, cfg.head_dim
     if btype in ("attn", "attn_moe", "shared_attn"):
         return {
@@ -360,6 +367,9 @@ def _block_decode_init(cfg, btype, batch_size, max_len):
     raise ValueError(btype)
 
 
+_block_decode_init = block_decode_init  # historical private name
+
+
 def decode_state_init(cfg: ArchConfig, batch_size: int, max_len: int):
     """Stacked (over repeats) decode state for every block in the unit."""
     states = []
@@ -373,18 +383,17 @@ def decode_state_init(cfg: ArchConfig, batch_size: int, max_len: int):
 
 
 def _attn_decode(cfg, p, ctx, h1, state, pos):
-    """h1: (B,1,D); state: {k,v} caches; pos: scalar current position."""
+    """h1: (B,1,D); state: {k,v} caches; pos: (B,) per-row positions."""
     b = h1.shape[0]
     hh, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     x = cm.apply_norm(cfg, p["norm1"], h1)
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = pos[:, None]
     if cfg.pos_mode == "mrope":
-        positions = jnp.full((3, b, 1), pos, jnp.int32)
+        positions = jnp.broadcast_to(pos[None, :, None], (3, b, 1))
     q, k, v = _project_qkv(cfg, p["attn"], ctx, x, positions)
-    kc = jax.lax.dynamic_update_slice(state["k"], k.astype(cfg.cdtype),
-                                      (0, pos, 0, 0))
-    vc = jax.lax.dynamic_update_slice(state["v"], v.astype(cfg.cdtype),
-                                      (0, pos, 0, 0))
+    rows = jnp.arange(b)
+    kc = state["k"].at[rows, pos].set(k[:, 0].astype(cfg.cdtype))
+    vc = state["v"].at[rows, pos].set(v[:, 0].astype(cfg.cdtype))
     o = attn_lib.decode_attention(q, kc, vc, pos + 1)
     o = ctx.linear("attn_o", o.reshape(b, 1, hh * dh), p["attn"]["wo"])
     h1 = h1 + cfg.residual_scale * o
@@ -398,14 +407,24 @@ def _attn_decode(cfg, p, ctx, h1, state, pos):
 
 def decode_step(cfg: ArchConfig, params, token: jax.Array, pos: jax.Array,
                 states, policy: cm.Policy):
-    """One serve step: token (B,) int32 -> logits (B, V), new states."""
+    """One serve step: token (B,) int32 -> logits (B, V), new states.
+
+    ``pos`` is a scalar (every row at the same position — the classic
+    aligned-batch serve step) or a (B,) vector of per-row positions —
+    the continuous-batching case, where each slot of a ragged batch
+    writes its KV at its own offset and attends over its own prefix
+    length.  The scalar case is lowered through the identical vector
+    ops (broadcast), so both paths share one set of numerics.
+    """
     ctx = cm.Ctx(policy=policy, key=None, znorms=None,
                  compute_dtype=cfg.cdtype)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
+                           token.shape)
     h = jnp.take(params["embed"], token, axis=0)[:, None, :].astype(
         cfg.cdtype)
     if cfg.pos_mode == "learned":
-        h = h + jax.lax.dynamic_slice_in_dim(
-            params["pos_embed"], pos, 1, axis=0)[None].astype(cfg.cdtype)
+        h = h + jnp.take(params["pos_embed"], pos, axis=0)[:, None].astype(
+            cfg.cdtype)
     shared = params.get("shared")
 
     def unit_step(h, xs):

@@ -64,9 +64,33 @@ def decode_state_init(cfg, batch_size: int, max_len: int):
 
 
 def decode_step(cfg, params, token, pos, states, policy):
+    """``pos``: scalar (aligned batch) or (B,) per-slot positions
+    (continuous batching; decoder-only LMs only)."""
     if cfg.is_encdec:
         return encdec.decode_step(cfg, params, token, pos, states, policy)
     return lm.decode_step(cfg, params, token, pos, states, policy)
+
+
+def block_decode_init(cfg, btype: str, batch_size: int, max_len: int):
+    """Un-stacked decode state of one block type (serve-pool builder)."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "enc-dec decode state is monolithic (decode_state_init); "
+            "the per-block slot pool serves decoder-only LMs")
+    return lm.block_decode_init(cfg, btype, batch_size, max_len)
+
+
+def serve_compatible(cfg: ArchConfig) -> Tuple[bool, str]:
+    """Whether the continuous-batching serve path supports this arch,
+    with the reason when it does not (surfaced by ``ServeSpec`` at
+    construction instead of erroring mid-serve)."""
+    if cfg.is_encdec:
+        return False, (
+            "encoder-decoder arch: decode requires a primed per-batch "
+            "cross-attention cache and a shared scalar position, which "
+            "the ragged slot pool cannot provide; serve decoder-only "
+            "LMs (dense/MoE/SSM/hybrid/VLM)")
+    return True, ""
 
 
 # ---------------------------------------------------------------------------

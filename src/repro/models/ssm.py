@@ -16,6 +16,7 @@ and keep exact gradients (consistent with the paper's scope, Fig. 4).
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Tuple
 
 import jax
@@ -374,6 +375,27 @@ def slstm_decode_init(cfg, batch: int):
     _, nh, dh = slstm_dims(cfg)
     z = jnp.zeros((batch, nh, dh), jnp.float32)
     return {"c": z, "n": z, "m": z - 1e30, "h": z}
+
+
+def decode_state_bytes(cfg, btype: str) -> int:
+    """Per-slot decode-state footprint (bytes) of one recurrent block.
+
+    Unlike a KV cache this is O(1) in sequence length, which is exactly
+    why the serving pool keeps recurrent state slot-indexed while KV is
+    paged: admission control charges a request pages for its KV but a
+    flat per-slot quantum for conv/SSM state.  Multiply by
+    ``cfg.n_repeats`` (and pattern multiplicity) for the whole stack.
+    """
+    inits = {
+        "mamba": lambda: mamba_decode_init(cfg, 1, cfg.cdtype),
+        "mlstm": lambda: mlstm_decode_init(cfg, 1),
+        "slstm": lambda: slstm_decode_init(cfg, 1),
+    }
+    if btype not in inits:
+        raise ValueError(f"not a recurrent block type: {btype!r}")
+    shapes = jax.eval_shape(inits[btype])
+    return sum(math.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree.leaves(shapes))
 
 
 def slstm_decode_step(cfg, p, ctx: cm.Ctx, h1, state):

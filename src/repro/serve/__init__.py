@@ -1,0 +1,25 @@
+"""Continuous-batching serving: slot-based paged cache pool + scheduler.
+
+Public surface::
+
+    from repro.serve import ServeSpec, ServeSession
+
+    spec = ServeSpec(arch="qwen2.5-3b", max_slots=4, page_size=16,
+                     max_len=128)
+    with ServeSession(spec, params).start() as sess:
+        h = sess.submit([3, 14, 15], max_new=16)
+        tokens = h.result(timeout=60)
+
+Layers: ``spec`` (frozen geometry + construction-time validation),
+``pool`` (paged KV / slot-indexed recurrent state + page free list),
+``sampling`` (batch-composition-independent sampled decode),
+``scheduler`` (admission / prefill-decode interleave / eviction),
+``session`` (the async host loop).  Import direction: serve never
+imports ``repro.api``; ``launch.train_steps`` builds the jitted steps.
+"""
+from repro.serve.scheduler import Request, Scheduler, Status
+from repro.serve.session import RequestHandle, ServeSession
+from repro.serve.spec import ServeSpec
+
+__all__ = ["Request", "RequestHandle", "Scheduler", "ServeSession",
+           "ServeSpec", "Status"]

@@ -1,0 +1,228 @@
+"""Slot-based paged cache pools: device layout + host page allocator.
+
+Generalizes ``models.registry.decode_state_init`` from one
+monolithically-allocated batch to a pool shared by a churning set of
+requests:
+
+* **Attention KV is paged.**  Every attention layer keeps K/V in a
+  ``(n_repeats, total_pages, page_size, KVH, Dh)`` pool; a slot owns a
+  row of the page table (``(max_slots, pages_per_slot)`` int32, page id
+  0 = scratch) and its contiguous decode-layout cache is materialized by
+  one gather per step.  Pages are the allocation quantum, so a finished
+  8-token request returns its one page to a queued 400-token request
+  immediately — the free-list fragmentation of per-request max-length
+  buffers is gone.
+
+* **Recurrent state is slot-indexed.**  Mamba conv/SSM, mLSTM and sLSTM
+  state is O(1) per sequence, so it lives directly at
+  ``(n_repeats, max_slots, ...)`` — slot id IS the batch row, no paging.
+  This is what makes zamba2/xlstm first-class serve targets instead of
+  attention-only specials.
+
+All gather/scatter helpers here are pure jax functions traced into the
+jitted serve/prefill steps (``launch.train_steps.make_slot_serve_step``);
+the :class:`PageAllocator` is the host-side free list the scheduler
+drives admission control with.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+
+_ATTN = ("attn", "attn_moe", "shared_attn")
+
+
+def init_pool(cfg: ArchConfig, spec):
+    """Device pool state: tuple over ``cfg.pattern`` entries, each leaf
+    stacked over repeats (mirrors ``decode_state_init``'s layout)."""
+    states = []
+    for btype in cfg.pattern:
+        if btype in _ATTN:
+            kvh, dh = cfg.n_kv_heads, cfg.head_dim
+            shape = (cfg.n_repeats, spec.total_pages, spec.page_size,
+                     kvh, dh)
+            states.append({"k": jnp.zeros(shape, cfg.cdtype),
+                           "v": jnp.zeros(shape, cfg.cdtype)})
+        else:
+            one = registry.block_decode_init(cfg, btype, spec.max_slots,
+                                             spec.slot_len)
+            states.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (cfg.n_repeats,) + x.shape).copy(), one))
+    return tuple(states)
+
+
+def pool_bytes(cfg: ArchConfig, spec) -> int:
+    """Total device bytes of the pool (report/§Serving accounting)."""
+    shapes = jax.eval_shape(lambda: init_pool(cfg, spec))
+    return sum(math.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree.leaves(shapes))
+
+
+# ---------------------------------------------------------------------------
+# Batched decode: gather pages -> decode-layout states -> scatter token
+# ---------------------------------------------------------------------------
+
+def gather_decode_states(cfg: ArchConfig, pool, page_table: jax.Array):
+    """Materialize contiguous decode-layout states for all slots.
+
+    page_table: (S, P) int32.  Attention entries gather their pages into
+    (R, S, P*page_size, KVH, Dh); recurrent entries pass through (their
+    batch dim already IS the slot dim)."""
+    states = []
+    for j, btype in enumerate(cfg.pattern):
+        if btype in _ATTN:
+            def lin(pages):
+                r, _, psz, kvh, dh = pages.shape
+                s, p = page_table.shape
+                g = pages[:, page_table]          # (R, S, P, psz, KVH, Dh)
+                return g.reshape(r, s, p * psz, kvh, dh)
+            states.append({"k": lin(pool[j]["k"]), "v": lin(pool[j]["v"])})
+        else:
+            states.append(pool[j])
+    return tuple(states)
+
+
+def scatter_decode_update(cfg: ArchConfig, pool, new_states,
+                          page_table: jax.Array, pos: jax.Array,
+                          active: jax.Array):
+    """Write one decode step's state updates back into the pool.
+
+    Attention entries extract the single K/V token each row wrote at its
+    own ``pos`` and scatter it into the owning page (inactive rows are
+    redirected to scratch page 0).  Recurrent entries replace the slot's
+    state where ``active`` and hold it elsewhere — a slot mid-prefill
+    must not have its carried conv/SSM state clobbered by the decode
+    batch it is not yet part of."""
+    s = page_table.shape[0]
+    rows = jnp.arange(s)
+    psz = None
+    pos_safe = jnp.where(active, pos, 0)
+    out = []
+    for j, btype in enumerate(cfg.pattern):
+        if btype in _ATTN:
+            psz = pool[j]["k"].shape[2]
+            page_ids = jnp.where(
+                active, page_table[rows, pos_safe // psz], 0)
+            offs = jnp.where(active, pos_safe % psz, 0)
+
+            def put(pages, cache):
+                tok = cache[:, rows, pos_safe]        # (R, S, KVH, Dh)
+                return pages.at[:, page_ids, offs].set(tok)
+
+            out.append({"k": put(pool[j]["k"], new_states[j]["k"]),
+                        "v": put(pool[j]["v"], new_states[j]["v"])})
+        else:
+            def merge(old, new):
+                m = active.reshape((1, s) + (1,) * (old.ndim - 2))
+                return jnp.where(m, new.astype(old.dtype), old)
+            out.append(jax.tree.map(merge, pool[j], new_states[j]))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot chunked prefill: gather one slot -> scan chunk -> scatter back
+# ---------------------------------------------------------------------------
+
+def gather_slot_states(cfg: ArchConfig, pool, page_table_row: jax.Array,
+                       slot: jax.Array, fresh: bool):
+    """Decode-layout states (batch = 1) for one slot.
+
+    ``fresh`` (static): the first prefill chunk of a newly admitted
+    request initializes recurrent state from the block constants instead
+    of the evicted predecessor's leftovers.  Stale KV needs no such
+    reset — positions beyond the slot's length are masked by
+    ``decode_attention`` and overwritten as the prompt advances."""
+    states = []
+    for j, btype in enumerate(cfg.pattern):
+        if btype in _ATTN:
+            def lin(pages):
+                r, _, psz, kvh, dh = pages.shape
+                p = page_table_row.shape[0]
+                g = pages[:, page_table_row]       # (R, P, psz, KVH, Dh)
+                return g.reshape(r, 1, p * psz, kvh, dh)
+            states.append({"k": lin(pool[j]["k"]), "v": lin(pool[j]["v"])})
+        elif fresh:
+            one = registry.block_decode_init(cfg, btype, 1, 0)
+            states.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (cfg.n_repeats,) + x.shape), one))
+        else:
+            states.append(jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=1),
+                pool[j]))
+    return tuple(states)
+
+
+def scatter_slot_states(cfg: ArchConfig, pool, states,
+                        page_table_row: jax.Array, slot: jax.Array):
+    """Write one slot's post-chunk states back into the pool.
+
+    Attention caches scatter ALL of the slot's pages (untouched pages
+    write back their just-gathered values; page-table entries beyond the
+    request's allocation point at scratch page 0, which absorbs the
+    duplicate writes)."""
+    out = []
+    for j, btype in enumerate(cfg.pattern):
+        if btype in _ATTN:
+            def put(pages, cache):
+                r, _, psz, kvh, dh = pages.shape
+                p = page_table_row.shape[0]
+                c = cache.reshape(r, p, psz, kvh, dh)
+                return pages.at[:, page_table_row].set(c)
+            out.append({"k": put(pool[j]["k"], states[j]["k"]),
+                        "v": put(pool[j]["v"], states[j]["v"])})
+        else:
+            out.append(jax.tree.map(
+                lambda old, new: jax.lax.dynamic_update_slice_in_dim(
+                    old, new.astype(old.dtype), slot, axis=1),
+                pool[j], states[j]))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Host-side page free list (admission control currency)
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """Free list over page ids 1..total_pages-1 (0 is scratch).
+
+    The scheduler charges a request ``spec.pages_needed(...)`` pages at
+    admission and returns them at eviction; ``can_alloc`` is the
+    admission predicate that keeps a full pool from accepting work it
+    cannot hold.  LIFO reuse keeps hot pages hot."""
+
+    def __init__(self, total_pages: int):
+        if total_pages < 2:
+            raise ValueError("need >= 2 pages (scratch + 1 usable)")
+        self._free: List[int] = list(range(total_pages - 1, 0, -1))
+        self.total_usable = total_pages - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if not self.can_alloc(n):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)} "
+                f"(admission control should have gated this request)")
+        ids, self._free = self._free[-n:], self._free[:-n]
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            if i <= 0:
+                raise ValueError(f"cannot free scratch/invalid page {i}")
+            if i in self._free:
+                raise ValueError(f"double free of page {i}")
+        self._free.extend(ids)

@@ -1,0 +1,50 @@
+"""Token sampling for decode: temperature / top-k categorical, greedy.
+
+One function, used by BOTH the slot-pool serve step and the solo
+``Run.generate`` path.  Determinism contract: the key for a sampled
+token depends only on (seed, request row, tokens generated so far) via
+``request_key`` — never on batch composition — so a request served
+through a churning continuous batch draws the same randomness as the
+same request run alone.  That, plus row-independent logits, is what
+makes the pool-vs-solo bit-match test meaningful for sampled decode.
+
+``top_k`` is static (compiled shapes); ``temperature`` is a per-row
+dynamic vector, with ``temperature == 0`` meaning greedy argmax for
+that row (exact, not a small-temperature limit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def request_key(seed: int, uid: int) -> jax.Array:
+    """Base PRNG key for one request, independent of slot placement."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), uid)
+
+
+def step_keys(base_keys: jax.Array, n_gen: jax.Array) -> jax.Array:
+    """Per-row key for the ``n_gen``-th generated token.
+
+    base_keys: (B, 2) uint32 stacked request keys; n_gen: (B,) int32."""
+    return jax.vmap(jax.random.fold_in)(base_keys, n_gen)
+
+
+def sample_logits(logits: jax.Array, keys: jax.Array,
+                  temperature: jax.Array, top_k: int = 0) -> jax.Array:
+    """Sample one token per row.  logits (B, V), keys (B, 2) uint32,
+    temperature (B,) float32 (0 = greedy for that row), top_k static
+    (0 = full vocab).  Returns (B,) int32."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if top_k > 0 and top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, NEG_INF, logits)
+    temp = temperature.astype(jnp.float32)
+    safe = jnp.where(temp > 0, temp, 1.0)
+    scaled = logits / safe[:, None]
+    drawn = jax.vmap(
+        lambda k, l: jax.random.categorical(k, l))(keys, scaled)
+    return jnp.where(temp > 0, drawn.astype(jnp.int32), greedy)

@@ -1,0 +1,275 @@
+"""Continuous-batching serving: the bit-exactness contract + machinery.
+
+The tentpole claim under test: a sequence served through the slot-based
+paged pool — with UNRELATED sequences admitted and evicted around it,
+ragged lengths, chunked prefill, slot reuse — produces bit-identical
+tokens to the same prompt run solo through ``Run.generate``.  Plus the
+satellites: ServeSpec construction-time validation (incl. the enc-dec
+rejection), deterministic sampling, page-allocator accounting, queue
+backpressure, and chunked-prefill equivalence.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Run, RunSpec, ServeSpec
+from repro.serve import ServeSession, Status
+from repro.serve.pool import PageAllocator
+from repro.serve import sampling
+
+
+@pytest.fixture(scope="module")
+def attn_run():
+    run = Run(RunSpec(arch="qwen2.5-3b", steps=1))
+    return run.init()
+
+
+@pytest.fixture(scope="module")
+def ssm_run():
+    run = Run(RunSpec(arch="xlstm-125m", steps=1))
+    return run.init()
+
+
+def _serve_solo_and_pool(run, prompts, gens, **spec_kw):
+    """Each prompt solo through Run.generate vs all through one pool."""
+    solos = [list(np.asarray(run.generate(
+        np.asarray(p, np.int32)[None], gen=g))[0])
+        for p, g in zip(prompts, gens)]
+    sess = run.serve(**spec_kw)
+    handles = [sess.submit(p, max_new=g) for p, g in zip(prompts, gens)]
+    sess.run_until_idle()
+    pooled = [h.result(timeout=0) for h in handles]
+    return solos, pooled, sess
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec: construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_servespec_rejects_encdec_at_construction():
+    with pytest.raises(ValueError, match="encoder-decoder"):
+        ServeSpec(arch="whisper-base")
+
+
+def test_servespec_rejects_bad_geometry():
+    with pytest.raises(ValueError, match="max_slots"):
+        ServeSpec(arch="qwen2.5-3b", max_slots=0)
+    with pytest.raises(ValueError, match="n_pages"):
+        ServeSpec(arch="qwen2.5-3b", max_len=64, page_size=16, n_pages=2)
+    with pytest.raises(Exception):
+        ServeSpec(arch="no-such-arch")
+
+
+def test_servespec_geometry_and_request_validation():
+    spec = ServeSpec(arch="qwen2.5-3b", max_slots=2, page_size=16,
+                     max_len=40)
+    assert spec.pages_per_slot == 3          # ceil(40/16)
+    assert spec.slot_len == 48
+    assert spec.total_pages == 2 * 3 + 1     # + scratch page 0
+    assert spec.pages_needed(5, 11) == 1
+    assert spec.pages_needed(5, 12) == 2
+    spec.validate_request(8, 32)             # fits exactly
+    with pytest.raises(ValueError, match="max_len"):
+        spec.validate_request(8, 33)
+    with pytest.raises(ValueError, match="empty"):
+        spec.validate_request(0, 4)
+
+
+# ---------------------------------------------------------------------------
+# Page allocator
+# ---------------------------------------------------------------------------
+
+def test_page_allocator_accounting():
+    a = PageAllocator(total_pages=5)         # pages 1..4 usable
+    assert a.n_free == 4
+    got = a.alloc(3)
+    assert len(got) == 3 and 0 not in got
+    assert not a.can_alloc(2)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.alloc(2)
+    a.free(got[:1])
+    assert a.can_alloc(2)
+    with pytest.raises(ValueError, match="double free"):
+        a.free(got[:1])
+    with pytest.raises(ValueError, match="scratch"):
+        a.free([0])
+
+
+# ---------------------------------------------------------------------------
+# The tentpole: pool-served == solo, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_pool_bitmatch_attention_ragged_with_churn(attn_run):
+    """Ragged prompts/gens, chunked prefill, more requests than slots
+    (forcing queueing, eviction and slot REUSE) — every request's tokens
+    equal its solo run exactly."""
+    prompts = [[3, 14, 15, 9, 2, 6, 5], [7, 7], [1], [9, 8, 7, 6, 5, 4],
+               [2, 4, 6]]
+    gens = [8, 5, 4, 3, 6]
+    solos, pooled, sess = _serve_solo_and_pool(
+        attn_run, prompts, gens, max_slots=2, page_size=4, max_len=16,
+        prefill_chunk=3)
+    assert pooled == solos
+    st = sess.stats
+    assert st["admitted"] == st["evicted"] == len(prompts)
+    assert st["tokens_generated"] == sum(gens)
+    # 2 slots, 5 requests -> slots were reused
+    assert sess.scheduler.alloc.n_free == sess.scheduler.alloc.total_usable
+
+
+def test_pool_bitmatch_ssm_arch_slot_reuse(ssm_run):
+    """Same contract on a recurrent arch (mLSTM/sLSTM blocks): slot
+    reuse must reset conv/SSM state, not inherit the evicted request's."""
+    # round 1 pollutes both slots; round 2 must be unaffected
+    sess = ssm_run.serve(max_slots=2, page_size=4, max_len=16,
+                         prefill_chunk=2)
+    for p, g in [([5, 6, 7], 3), ([9], 3)]:
+        sess.submit(p, max_new=g)
+    sess.run_until_idle()
+    prompt, gen = [3, 14, 15, 9, 2], 6
+    solo = list(np.asarray(ssm_run.generate(
+        np.asarray(prompt, np.int32)[None], gen=gen))[0])
+    h = sess.submit(prompt, max_new=gen)
+    sess.submit([2, 2], max_new=4)           # concurrent churn
+    sess.run_until_idle()
+    assert h.result(timeout=0) == solo
+
+
+def test_single_token_prompt_bitmatch(attn_run):
+    """Zero prefill chunks: recurrent reset + straight-to-decode path."""
+    solo = list(np.asarray(attn_run.generate(
+        np.asarray([[4]], np.int32), gen=5))[0])
+    sess = attn_run.serve(max_slots=2, page_size=4, max_len=8)
+    h = sess.submit([4], max_new=5)
+    sess.run_until_idle()
+    assert h.result(timeout=0) == solo
+
+
+# ---------------------------------------------------------------------------
+# Sampling: deterministic, composition-independent
+# ---------------------------------------------------------------------------
+
+def test_sample_logits_greedy_and_topk_limits():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(3, 32)),
+                         jnp.float32)
+    keys = jnp.stack([sampling.request_key(0, r) for r in range(3)])
+    greedy = np.argmax(np.asarray(logits), axis=-1)
+    # temperature 0 == argmax, exactly
+    out0 = sampling.sample_logits(logits, keys, jnp.zeros(3))
+    assert (np.asarray(out0) == greedy).all()
+    # top_k=1 == argmax regardless of temperature
+    out1 = sampling.sample_logits(logits, keys, jnp.full(3, 2.0), top_k=1)
+    assert (np.asarray(out1) == greedy).all()
+    # same keys -> same draw; different step key -> (generally) different
+    a = sampling.sample_logits(logits, keys, jnp.ones(3))
+    b = sampling.sample_logits(logits, keys, jnp.ones(3))
+    assert (np.asarray(a) == np.asarray(b)).all()
+    # mixed rows: temp-0 rows greedy, temp>0 rows sampled with own keys
+    mixed = sampling.sample_logits(logits, keys,
+                                   jnp.asarray([0.0, 1.0, 0.0]))
+    m = np.asarray(mixed)
+    assert m[0] == greedy[0] and m[2] == greedy[2]
+    assert m[1] == np.asarray(a)[1]
+
+
+def test_sampled_serving_deterministic_and_matches_solo(attn_run):
+    prompt, gen = [3, 14, 15, 9], 6
+    solo = np.asarray(attn_run.generate(
+        np.asarray(prompt, np.int32)[None], gen=gen,
+        temperature=0.7, seed=11, top_k=8))[0]
+
+    def serve_once():
+        sess = attn_run.serve(max_slots=2, page_size=4, max_len=16,
+                              top_k=8)
+        h = sess.submit(prompt, max_new=gen, temperature=0.7, seed=11,
+                        uid=0)
+        sess.submit([8, 8, 8], max_new=4, temperature=1.3, seed=5)
+        sess.run_until_idle()
+        return h.result(timeout=0)
+
+    first, second = serve_once(), serve_once()
+    assert first == second                   # deterministic under seed
+    assert first == list(solo)               # == solo with uid as row
+
+
+# ---------------------------------------------------------------------------
+# Admission control / queue backpressure
+# ---------------------------------------------------------------------------
+
+def test_queue_overflow_raises(attn_run):
+    sess = attn_run.serve(max_slots=1, page_size=4, max_len=8,
+                          max_queue=2)
+    sess.submit([1, 2], max_new=2)
+    sess.submit([1, 2], max_new=2)           # queue now at max_queue
+    with pytest.raises(RuntimeError, match="queue full"):
+        sess.submit([1, 2], max_new=2)
+    sess.step()                              # admission drains the queue
+    sess.submit([1, 2], max_new=2)           # accepted again
+    sess.run_until_idle()
+
+
+def test_admission_gated_on_pages(attn_run):
+    """Pages scarcer than slots: the second request must WAIT for the
+    first one's pages even though a slot is free, then still complete."""
+    sess = attn_run.serve(max_slots=2, page_size=4, max_len=8,
+                          n_pages=3)          # 2 usable pages
+    a = sess.submit([1, 2, 3], max_new=5)     # needs 2 pages: takes all
+    b = sess.submit([4, 5, 6], max_new=5)
+    sess.step()
+    reqs = [s.req for s in sess.scheduler.slots]
+    assert b.request.status is Status.QUEUED and b.request not in reqs
+    sess.run_until_idle()
+    assert len(a.result(0)) == 5 and len(b.result(0)) == 5
+
+
+def test_async_host_loop_serves_from_background_thread(attn_run):
+    with attn_run.serve(max_slots=2, page_size=4,
+                        max_len=16).start() as sess:
+        hs = [sess.submit([3, 1, 4], max_new=4) for _ in range(3)]
+        outs = [h.result(timeout=120) for h in hs]
+    assert outs[0] == outs[1] == outs[2]
+    assert len(outs[0]) == 4
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (satellite): chunk size never changes results
+# ---------------------------------------------------------------------------
+
+def test_run_prefill_chunk_size_invariant():
+    prompts = np.asarray([[3, 14, 15, 9, 2, 6, 5, 11, 12],
+                          [1, 2, 3, 4, 5, 6, 7, 8, 9]], np.int32)
+    outs = []
+    for chunk in (1, 4, 64):
+        run = Run(RunSpec(arch="qwen2.5-3b", steps=1,
+                          prefill_chunk=chunk)).init()
+        outs.append(np.asarray(run.generate(prompts, gen=5)))
+    assert (outs[0] == outs[1]).all() and (outs[1] == outs[2]).all()
+
+
+def test_recurrent_decode_state_bytes_matches_block_init():
+    """The admission-accounting helper agrees with the actual per-slot
+    state the pool allocates (batch=1, max_len irrelevant: O(1))."""
+    from repro.configs import get_config
+    from repro.models import lm, ssm
+    cases = [("xlstm-125m", "mlstm"), ("xlstm-125m", "slstm"),
+             ("zamba2-2.7b", "mamba")]
+    for arch, btype in cases:
+        cfg = get_config(arch, reduced=True)
+        shapes = jax.eval_shape(lambda: lm.block_decode_init(cfg, btype,
+                                                             1, 0))
+        want = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree.leaves(shapes))
+        assert ssm.decode_state_bytes(cfg, btype) == want
+    with pytest.raises(ValueError, match="recurrent"):
+        ssm.decode_state_bytes(get_config("qwen2.5-3b", reduced=True),
+                               "attn")
+
+
+def test_run_serve_spec_passthrough_and_conflict(attn_run):
+    spec = ServeSpec(arch="qwen2.5-3b", max_slots=2, page_size=4,
+                     max_len=16)
+    sess = attn_run.serve(spec)
+    assert isinstance(sess, ServeSession) and sess.spec is spec
+    with pytest.raises(ValueError, match="not both"):
+        attn_run.serve(spec, max_slots=4)
