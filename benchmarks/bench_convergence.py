@@ -31,9 +31,9 @@ from repro.core import ESSProportional
 from repro.core.config import EstimatorKind, NormSource, WTACRSConfig
 from repro.core.lora import LoRAConfig
 from repro.core.policy import BudgetSchedule, PolicyRules, Rule
+from repro.launch import train_steps
 from repro.models import common as cm
 from repro.train import data, optim, znorm
-from repro.launch import train_steps
 
 STEPS = 40
 
@@ -164,7 +164,8 @@ def run():
         if base_final is None:
             base_final = losses[-1]
         emit(f"table1_final_loss[{name}]", wall,
-             f"loss={losses[-1]:.4f} gap_vs_full={losses[-1] - base_final:+.4f}")
+             f"loss={losses[-1]:.4f} "
+             f"gap_vs_full={losses[-1] - base_final:+.4f}")
 
     for budget in common.smoke_or((0.3,), (1.0, 0.5, 0.3, 0.1)):
         pol = cm.Policy(wtacrs=WTACRSConfig(

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common
 from benchmarks.common import emit, time_jit
@@ -44,7 +43,8 @@ def run():
     # Pallas kernels (interpret mode -- correctness path visibility only)
     from repro.kernels import ops
     n = common.smoke_or(128, 512)
-    x = jax.random.normal(key, (n, n), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (n, n),
+                          jnp.float32)
     t = time_jit(lambda: ops.row_norms(x, block_rows=128, block_d=128))
     emit("kernel_row_norms_interp", t, "interpret-mode (not perf)")
     idx = jnp.arange(n // 4, dtype=jnp.int32)

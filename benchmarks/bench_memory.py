@@ -11,7 +11,6 @@ plus the implied max batch under a fixed activation budget (Fig. 6).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax._src.ad_checkpoint import saved_residuals
 
 from benchmarks import common

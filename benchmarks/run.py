@@ -39,7 +39,18 @@ def main() -> None:
                     help="CI-sized run: reduced shapes/steps, same paths")
     ap.add_argument("--out-dir", default=".",
                     help="directory for BENCH_*.json artifacts")
+    ap.add_argument("--list", action="store_true",
+                    help="import each module, print its name and first "
+                         "docstring line, and exit (CI smoke for the "
+                         "harness wiring — no benchmark runs)")
     args = ap.parse_args()
+
+    if args.list:
+        for m in MODULES:
+            mod = importlib.import_module(f"benchmarks.{m}")
+            doc = (mod.__doc__ or "").strip().splitlines()
+            print(f"{m}: {doc[0] if doc else ''}")
+        return
 
     from benchmarks import common
     common.set_smoke(args.smoke)

@@ -14,6 +14,7 @@ run report prints its trajectory.  ``--full-size`` trains the ~125M
 published xLSTM config.
 """
 import argparse
+import dataclasses
 
 from repro.api import DataSpec, Run, RunSpec
 from repro.core import (BudgetSchedule, ESSProportional, PolicyRules,
@@ -52,7 +53,13 @@ def main():
             "*mlp*", base,
             ESSProportional(b_min=0.1, b_max=0.6, levels=6, warmup=3)))
     elif args.warmup_exact > 0:
+        # MoE routers sample the flattened-rows dim: the per-sample
+        # gradient-norm cache has no column for them (PT003), so they
+        # take activation norms while everything else uses the cache.
+        router = dataclasses.replace(
+            base, norm_source=NormSource.ACTIVATION_ONLY)
         rules = PolicyRules.of(
+            ("*moe_router", router),
             ("*", base, BudgetSchedule.warmup_exact(
                 begin_step=args.warmup_exact, end=args.budget)))
     policy = cm.Policy(

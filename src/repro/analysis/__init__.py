@@ -1,0 +1,25 @@
+"""repro.analysis — JAX/Pallas-aware static analysis.
+
+Three analyzer families, all pure-``ast`` over source text (the
+analyzed code is never imported, except by the optional policy/tag
+cross-checker, which traces registry configs under ``eval_shape``):
+
+  * ``jax_lints`` (JL*): host-sync calls and tracer misuse inside
+    jitted/traced scopes, mutable closure captures in step builders,
+    PRNG key reuse, ``hash()``-seeded keys.
+  * ``pallas_contracts`` (PK*): BlockSpec/grid consistency, block
+    divisibility guards, per-block VMEM footprint vs budget,
+    f32-accumulator discipline for MXU ops.
+  * ``policy_check`` (PT*): tag-glob policy rules cross-checked
+    against the tags each registry architecture actually emits.
+
+Run with ``python -m repro.analysis [paths...]``; see ``--help``.
+"""
+from repro.analysis.cli import analyze_paths, main
+from repro.analysis.findings import (ERROR, NOTE, RULES, WARNING,
+                                     Baseline, Finding, sort_findings)
+
+__all__ = [
+    "analyze_paths", "main", "Finding", "Baseline", "sort_findings",
+    "RULES", "ERROR", "WARNING", "NOTE",
+]

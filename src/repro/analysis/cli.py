@@ -1,0 +1,163 @@
+"""Command-line driver: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean (or everything baselined / notes only), 1 gating
+findings (errors or warnings by default; tune with ``--fail-on``),
+2 usage / internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis import jax_lints, pallas_contracts, policy_check
+from repro.analysis.astutil import load_modules
+from repro.analysis.findings import (ERROR, NOTE, RULES, SEVERITY_ORDER,
+                                     WARNING, Baseline, Finding,
+                                     sort_findings)
+
+DEFAULT_BASELINE = "analysis-baseline.json"
+
+
+def analyze_paths(paths: Sequence[str], *, policy: bool = True,
+                  vmem_budget: Optional[int] = None,
+                  tag_universe: Optional[dict] = None) -> List[Finding]:
+    """Run every analyzer family over ``paths`` and return raw findings
+    (no baseline filtering).  The main entry point for tests."""
+    modules, broken = load_modules(paths)
+    findings: List[Finding] = [
+        Finding(rule="AN001", path=p, line=1, col=1, symbol="<module>",
+                message="file does not parse; analyzers skipped it")
+        for p in broken
+    ]
+    findings.extend(jax_lints.check(modules))
+    findings.extend(pallas_contracts.check(
+        modules, vmem_budget=vmem_budget))
+    if policy:
+        findings.extend(policy_check.check(modules,
+                                           universe=tag_universe))
+    return sort_findings(findings)
+
+
+def _gates(fail_on: str):
+    threshold = SEVERITY_ORDER[fail_on]
+    return lambda f: SEVERITY_ORDER.get(f.severity, 3) <= threshold
+
+
+def _list_rules() -> str:
+    lines = ["rule   severity  description"]
+    for rid in sorted(RULES):
+        sev, desc = RULES[rid]
+        lines.append(f"{rid:6s} {sev:9s} {desc}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas-aware static analysis for the repro "
+                    "codebase: JAX footgun lints (JL*), Pallas kernel "
+                    "contract checks (PK*), policy/tag cross-checks "
+                    "(PT*).")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories (default: src/repro)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as a JSON document")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help=f"suppression baseline (default: "
+                         f"{DEFAULT_BASELINE} when it exists)")
+    ap.add_argument("--write-baseline", default=None, metavar="FILE",
+                    help="write current findings as a new baseline "
+                         "(justifications left empty for review) and "
+                         "exit 0")
+    ap.add_argument("--no-policy", action="store_true",
+                    help="skip the policy/tag cross-checker (avoids "
+                         "importing jax)")
+    ap.add_argument("--vmem-budget-mb", type=float, default=None,
+                    metavar="MB",
+                    help="per-block VMEM budget for PK004 (default 16)")
+    ap.add_argument("--select", default=None, metavar="RULES",
+                    help="comma-separated rule ids to keep "
+                         "(e.g. JL001,PK003)")
+    ap.add_argument("--fail-on", choices=[ERROR, WARNING, NOTE],
+                    default=WARNING,
+                    help="lowest severity that causes exit 1 "
+                         "(default: warning)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    paths = list(args.paths) or ["src/repro"]
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+
+    vmem = (int(args.vmem_budget_mb * 1024 * 1024)
+            if args.vmem_budget_mb is not None else None)
+    findings = analyze_paths(paths, policy=not args.no_policy,
+                             vmem_budget=vmem)
+
+    if args.select:
+        keep = {r.strip() for r in args.select.split(",") if r.strip()}
+        findings = [f for f in findings if f.rule in keep]
+
+    if args.write_baseline:
+        Baseline.from_findings(findings).save(args.write_baseline)
+        print(f"wrote {len(findings)} suppression(s) to "
+              f"{args.write_baseline}; add justifications before "
+              f"committing")
+        return 0
+
+    baseline_path = args.baseline
+    if baseline_path is None and os.path.exists(DEFAULT_BASELINE):
+        baseline_path = DEFAULT_BASELINE
+    baseline = None
+    if baseline_path:
+        try:
+            baseline = Baseline.load(baseline_path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"error: cannot read baseline {baseline_path}: {e}",
+                  file=sys.stderr)
+            return 2
+
+    suppressed: List[Finding] = []
+    if baseline is not None:
+        live = [f for f in findings if not baseline.is_suppressed(f)]
+        suppressed = [f for f in findings if f not in live]
+        findings = live + baseline.audit()
+        findings = sort_findings(findings)
+
+    gate = _gates(args.fail_on)
+    failing = [f for f in findings if gate(f)]
+
+    if args.json:
+        doc = {
+            "version": 1,
+            "findings": [f.to_json() for f in findings],
+            "suppressed": len(suppressed),
+            "failing": len(failing),
+        }
+        print(json.dumps(doc, indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        counts = {}
+        for f in findings:
+            counts[f.severity] = counts.get(f.severity, 0) + 1
+        summary = ", ".join(
+            f"{counts.get(s, 0)} {s}(s)" for s in (ERROR, WARNING, NOTE))
+        tail = f" ({len(suppressed)} baselined)" if suppressed else ""
+        print(f"repro.analysis: {summary}{tail}")
+
+    return 1 if failing else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,537 @@
+"""JAX footgun lints (rule family JL).
+
+These are AST lints specialized to this codebase's conventions:
+
+  * **Traced scopes** are the functions jit actually traces — inner
+    functions returned by ``make_*`` builders (the step-builder idiom),
+    functions decorated with ``jax.jit``, bodies handed to
+    ``jax.lax.scan`` / ``fori_loop`` / ``while_loop`` / ``shard_map``,
+    Pallas kernel bodies, and anything nested inside those.  Static
+    configuration enters traced scopes as *keyword-only* parameters or
+    closure constants, so positional parameters are treated as traced
+    values.
+
+  * **Tick paths** are methods of any class that defines a ``tick``
+    method (the serving scheduler shape): host-side loops where an
+    *implicit* device→host transfer (``np.asarray`` / ``int`` / ...
+    on a step function's result) hides a blocking sync that should be
+    one explicit ``jax.device_get`` per tick.
+
+Rules:
+
+  JL001  host sync (``.item()``/``float()``/``int()``/``bool()``/
+         ``np.asarray``) on a traced value inside a jitted scope
+  JL002  implicit device→host transfer on a step-fn result in a
+         scheduler tick path (use one explicit ``jax.device_get``)
+  JL003  mutable closure capture in a jit-traced builder product
+         (recompile hazard / silently stale state)
+  JL004  PRNG key consumed more than once without ``fold_in``/``split``
+  JL005  Python branch on a traced value (trace-time freeze or
+         ConcretizationTypeError)
+  JL006  ``hash()`` feeding PRNG key derivation (PYTHONHASHSEED makes
+         streams differ across processes; use zlib.crc32)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.findings import (ERROR, WARNING, Finding,
+                                     register_rule)
+
+JL001 = register_rule("JL001", ERROR,
+                      "host sync on traced value inside jitted scope")
+JL002 = register_rule("JL002", WARNING,
+                      "implicit device->host transfer in tick path")
+JL003 = register_rule("JL003", WARNING,
+                      "mutable closure capture in jitted builder")
+JL004 = register_rule("JL004", ERROR,
+                      "PRNG key consumed more than once")
+JL005 = register_rule("JL005", WARNING,
+                      "Python branch on traced value")
+JL006 = register_rule("JL006", ERROR,
+                      "hash() feeds PRNG key derivation")
+
+_SYNC_BUILTINS = ("float", "int", "bool")
+_SYNC_CALLS = ("np.asarray", "np.array", "numpy.asarray", "numpy.array")
+_SYNC_METHODS = ("item", "tolist", "to_py")
+_TRACING_CONSUMERS = ("jax.lax.scan", "jax.lax.fori_loop",
+                      "jax.lax.while_loop", "jax.lax.cond",
+                      "shard_map", "jax.jit", "pl.pallas_call")
+_KEY_MAKERS = ("jax.random.PRNGKey", "jax.random.key",
+               "jax.random.fold_in", "jax.random.wrap_key_data",
+               "random.PRNGKey", "random.fold_in")
+_KEY_CONSUMERS = frozenset((
+    "normal", "uniform", "randint", "categorical", "bernoulli", "bits",
+    "permutation", "choice", "gumbel", "truncated_normal", "exponential",
+    "laplace", "beta", "gamma", "poisson", "dirichlet", "shuffle"))
+_KEY_PARAM_PREFIXES = ("key", "rng", "prng")
+
+
+def _fn_name(node: ast.AST) -> Optional[str]:
+    return node.name if isinstance(node, ast.FunctionDef) else None
+
+
+def _is_jit_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        name = astutil.dotted(dec)
+        if name and name.endswith("jit"):
+            return True
+        if isinstance(dec, ast.Call):
+            name = astutil.call_name(dec)
+            if name and name.endswith("jit"):
+                return True
+            if name and name.endswith("partial") and dec.args:
+                inner = astutil.dotted(dec.args[0])
+                if inner and inner.endswith("jit"):
+                    return True
+    return False
+
+
+def _returned_names(fn: ast.FunctionDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Name):
+            out.add(node.value.id)
+    return out
+
+
+def traced_functions(mod: astutil.Module) -> List[ast.FunctionDef]:
+    """Functions whose bodies run under a jax trace (see module doc)."""
+    roots: Set[int] = set()
+    fns = mod.functions()
+
+    for fn in fns:
+        if _is_jit_decorated(fn):
+            roots.add(id(fn))
+        parent = mod.parent(fn)
+        if (isinstance(parent, ast.FunctionDef)
+                and parent.name.startswith("make_")
+                and fn.name in _returned_names(parent)):
+            roots.add(id(fn))
+
+    # bodies handed to scan/fori/while/shard_map/jit/pallas_call by name
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = astutil.call_name(node)
+        if name is None:
+            continue
+        if not any(name == c or name.endswith("." + c.split(".")[-1])
+                   and c.split(".")[-1] in ("scan", "fori_loop",
+                                            "while_loop", "shard_map",
+                                            "pallas_call")
+                   for c in _TRACING_CONSUMERS):
+            continue
+        cands = list(node.args[:2])
+        for a in node.args[:1] if name.endswith("pallas_call") else cands:
+            target = a
+            if (isinstance(a, ast.Call)
+                    and (astutil.call_name(a) or "").endswith("partial")
+                    and a.args):
+                target = a.args[0]
+            if isinstance(target, ast.Name):
+                for fn in fns:
+                    if fn.name == target.id:
+                        roots.add(id(fn))
+
+    # close over nesting: anything inside a traced fn is traced
+    traced: List[ast.FunctionDef] = []
+    for fn in fns:
+        cur: Optional[ast.AST] = fn
+        while cur is not None:
+            if id(cur) in roots:
+                traced.append(fn)
+                break
+            cur = mod.parent(cur)
+    return traced
+
+
+def _traced_params(fn: ast.FunctionDef) -> Set[str]:
+    """Positional params (kw-only params are the static idiom)."""
+    names = {a.arg for a in fn.args.posonlyargs + fn.args.args}
+    names.discard("self")
+    return names
+
+
+def _chain_params(mod: astutil.Module, fn: ast.FunctionDef,
+                  traced_ids: Set[int]) -> Set[str]:
+    """Traced params of ``fn`` plus every enclosing traced function."""
+    out: Set[str] = set()
+    cur: Optional[ast.AST] = fn
+    while cur is not None:
+        if isinstance(cur, ast.FunctionDef) and id(cur) in traced_ids:
+            out |= _traced_params(cur)
+        cur = mod.parent(cur)
+    return out
+
+
+def _touches(node: ast.AST, params: Set[str]) -> bool:
+    """Whether evaluating ``node`` reads runtime data of ``params``
+    (access through .shape/.ndim/... and len() is static)."""
+    if isinstance(node, ast.Name):
+        return node.id in params
+    if isinstance(node, ast.Attribute):
+        if node.attr in astutil.STATIC_ATTRS:
+            return False
+        return _touches(node.value, params)
+    if isinstance(node, ast.Call):
+        name = astutil.call_name(node)
+        if name in ("len", "isinstance", "type"):
+            return False
+        return any(_touches(a, params) for a in node.args) or any(
+            _touches(kw.value, params) for kw in node.keywords)
+    if isinstance(node, ast.Compare):
+        ops_in = [isinstance(op, (ast.In, ast.NotIn)) for op in node.ops]
+        if any(ops_in):
+            # membership on a traced container is a structure test
+            # ("budget_stats" in state) — only the element side counts
+            sides = [node.left] + list(node.comparators)
+            checked = [sides[0]] + [
+                c for c, is_in in zip(sides[1:], ops_in) if not is_in]
+            return any(_touches(s, params) for s in checked)
+    for child in ast.iter_child_nodes(node):
+        if _touches(child, params):
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# JL001 / JL005 — inside traced scopes
+# ---------------------------------------------------------------------------
+
+def _check_traced_scopes(mod: astutil.Module) -> List[Finding]:
+    out: List[Finding] = []
+    traced = traced_functions(mod)
+    traced_ids = {id(f) for f in traced}
+    for fn in traced:
+        params = _chain_params(mod, fn, traced_ids)
+        for node in ast.iter_child_nodes(fn):
+            out.extend(_scan_traced(mod, fn, node, params, traced_ids))
+    return out
+
+
+def _scan_traced(mod, fn, node, params, traced_ids) -> List[Finding]:
+    out: List[Finding] = []
+    if isinstance(node, ast.FunctionDef):
+        return out  # nested defs are visited as their own traced fns
+    if isinstance(node, ast.Call):
+        name = astutil.call_name(node)
+        flagged = None
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in _SYNC_BUILTINS and node.args
+                and _touches(node.args[0], params)):
+            flagged = f"{node.func.id}()"
+        elif name in _SYNC_CALLS and node.args \
+                and _touches(node.args[0], params):
+            flagged = name
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr in _SYNC_METHODS
+              and _touches(node.func.value, params)):
+            flagged = f".{node.func.attr}()"
+        if flagged:
+            out.append(Finding(
+                rule="JL001", path=mod.path, line=node.lineno,
+                col=node.col_offset + 1, symbol=mod.symbol_for(node),
+                message=f"{flagged} on traced value inside a jitted "
+                        f"scope forces a host sync (or fails to trace); "
+                        f"keep it on-device or move it to the host "
+                        f"driver"))
+    if isinstance(node, (ast.If, ast.While)) \
+            and _touches(node.test, params):
+        kind = "while" if isinstance(node, ast.While) else "if"
+        out.append(Finding(
+            rule="JL005", path=mod.path, line=node.lineno,
+            col=node.col_offset + 1, symbol=mod.symbol_for(node),
+            message=f"Python `{kind}` on a traced value freezes the "
+                    f"branch at trace time (or raises under jit); use "
+                    f"jnp.where / lax.cond / lax.select"))
+    for child in ast.iter_child_nodes(node):
+        out.extend(_scan_traced(mod, fn, child, params, traced_ids))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JL002 — tick-path implicit transfers
+# ---------------------------------------------------------------------------
+
+def _stepfn_call(node: ast.AST) -> bool:
+    """Calls of self._*fn / *_fn attributes — the cached jitted steps."""
+    if not isinstance(node, ast.Call):
+        return False
+    fn = node.func
+    if isinstance(fn, ast.Attribute) and fn.attr.endswith("_fn"):
+        return True
+    if isinstance(fn, ast.Name) and fn.id.endswith("_fn"):
+        return True
+    # self._prefill_fn(n)(...) — call of a getter's result
+    if isinstance(fn, ast.Call):
+        return _stepfn_call(fn)
+    return False
+
+
+def _check_tick_paths(mod: astutil.Module) -> List[Finding]:
+    out: List[Finding] = []
+    for cls in ast.walk(mod.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        methods = [n for n in cls.body if isinstance(n, ast.FunctionDef)]
+        if not any(m.name == "tick" for m in methods):
+            continue
+        for m in methods:
+            out.extend(_scan_tick_method(mod, m))
+    return out
+
+
+def _scan_tick_method(mod: astutil.Module,
+                      fn: ast.FunctionDef) -> List[Finding]:
+    device: Set[str] = set()
+    out: List[Finding] = []
+
+    def bind(target: ast.expr, from_step: bool) -> None:
+        if isinstance(target, ast.Name):
+            (device.add if from_step else device.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                bind(e, from_step)
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, ast.Assign):
+            visit(node.value)
+            from_step = _stepfn_call(node.value)
+            for t in node.targets:
+                bind(t, from_step)
+            return
+        if isinstance(node, ast.Call):
+            name = astutil.call_name(node)
+            hit = None
+            if name in _SYNC_CALLS and node.args \
+                    and _touches(node.args[0], device):
+                hit = name
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id in _SYNC_BUILTINS and node.args
+                  and _touches(node.args[0], device)):
+                hit = f"{node.func.id}()"
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in _SYNC_METHODS
+                  and _touches(node.func.value, device)):
+                hit = f".{node.func.attr}()"
+            if hit:
+                out.append(Finding(
+                    rule="JL002", path=mod.path, line=node.lineno,
+                    col=node.col_offset + 1,
+                    symbol=mod.symbol_for(node),
+                    message=f"{hit} on a step-function result hides a "
+                            f"blocking device->host sync in the tick "
+                            f"path; fetch once with an explicit "
+                            f"jax.device_get"))
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    for stmt in fn.body:
+        visit(stmt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JL003 — mutable closure captures in make_* builder products
+# ---------------------------------------------------------------------------
+
+_MUTATORS = ("append", "extend", "add", "update", "setdefault", "pop",
+             "insert", "remove", "clear")
+_MUTABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+
+
+def _check_builder_captures(mod: astutil.Module) -> List[Finding]:
+    out: List[Finding] = []
+    for builder in mod.functions():
+        if not builder.name.startswith("make_"):
+            continue
+        returned = _returned_names(builder)
+        inners = [n for n in builder.body
+                  if isinstance(n, ast.FunctionDef)
+                  and n.name in returned]
+        if not inners:
+            continue
+        mutable = _mutable_bindings(builder)
+        for inner in inners:
+            local = _local_names(inner)
+            for node in ast.walk(inner):
+                if (isinstance(node, ast.Name)
+                        and isinstance(node.ctx, ast.Load)
+                        and node.id in mutable
+                        and node.id not in local):
+                    out.append(Finding(
+                        rule="JL003", path=mod.path, line=node.lineno,
+                        col=node.col_offset + 1,
+                        symbol=mod.symbol_for(node),
+                        message=f"jitted closure captures mutable "
+                                f"builder state {node.id!r} "
+                                f"({mutable[node.id]}); jit traces it "
+                                f"ONCE — later mutation is silently "
+                                f"ignored (or it breaks hashing as a "
+                                f"static arg); capture an immutable "
+                                f"snapshot (tuple/frozen dataclass)"))
+                    break  # one finding per (inner, name) pair is enough
+    return out
+
+
+def _iter_own_scope(fn: ast.FunctionDef):
+    """Nodes of ``fn``'s own scope (nested function bodies excluded)."""
+    stack: List[ast.AST] = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                stack.append(child)
+
+
+def _mutable_bindings(builder: ast.FunctionDef) -> Dict[str, str]:
+    """Builder-level names bound to mutable displays or mutated."""
+    out: Dict[str, str] = {}
+    for sub in _iter_own_scope(builder):
+        if isinstance(sub, ast.Assign):
+            for t in sub.targets:
+                if isinstance(t, ast.Name) and isinstance(
+                        sub.value, _MUTABLE_DISPLAYS):
+                    out[t.id] = "a mutable literal"
+        if (isinstance(sub, ast.Call)
+                and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr in _MUTATORS
+                and isinstance(sub.func.value, ast.Name)):
+            out[sub.func.value.id] = "mutated in the builder"
+        if isinstance(sub, ast.AugAssign) and isinstance(
+                sub.target, ast.Name):
+            out.setdefault(sub.target.id, "mutated in the builder")
+    return out
+
+
+def _local_names(fn: ast.FunctionDef) -> Set[str]:
+    names = {a.arg for a in fn.args.posonlyargs + fn.args.args
+             + fn.args.kwonlyargs}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# JL004 — key reuse
+# ---------------------------------------------------------------------------
+
+def _branch_path(mod: astutil.Module,
+                 node: ast.AST) -> Tuple[Tuple[int, str], ...]:
+    """(if-node id, arm) ancestry — used to prove mutual exclusion."""
+    path = []
+    child, cur = node, mod.parent(node)
+    while cur is not None:
+        if isinstance(cur, ast.If):
+            arm = "body"
+            for n in cur.orelse:
+                if child is n or any(id(child) == id(x)
+                                     for x in ast.walk(n)):
+                    arm = "orelse"
+                    break
+            path.append((id(cur), arm))
+        child, cur = cur, mod.parent(cur)
+    return tuple(reversed(path))
+
+
+def _exclusive(mod, a: ast.AST, b: ast.AST) -> bool:
+    pa, pb = _branch_path(mod, a), _branch_path(mod, b)
+    for (ia, arma), (ib, armb) in zip(pa, pb):
+        if ia == ib and arma != armb:
+            return True
+    return False
+
+
+def _check_key_reuse(mod: astutil.Module) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in mod.functions():
+        key_names = {a.arg for a in fn.args.args + fn.args.kwonlyargs
+                     if a.arg.startswith(_KEY_PARAM_PREFIXES)}
+        for node in fn.body:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Assign) and isinstance(
+                        sub.value, ast.Call):
+                    name = astutil.call_name(sub.value) or ""
+                    if (name in _KEY_MAKERS
+                            or name.endswith((".fold_in", ".PRNGKey",
+                                              ".wrap_key_data"))):
+                        for t in sub.targets:
+                            if isinstance(t, ast.Name):
+                                key_names.add(t.id)
+        if not key_names:
+            continue
+        uses: Dict[str, List[ast.Call]] = {}
+        for sub in ast.walk(fn):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = astutil.call_name(sub) or ""
+            leaf = name.rsplit(".", 1)[-1]
+            if leaf not in _KEY_CONSUMERS or not sub.args:
+                continue
+            first = sub.args[0]
+            if isinstance(first, ast.Name) and first.id in key_names:
+                uses.setdefault(first.id, []).append(sub)
+        for key, calls in uses.items():
+            if len(calls) < 2:
+                continue
+            conflicting = [
+                (a, b) for i, a in enumerate(calls)
+                for b in calls[i + 1:] if not _exclusive(mod, a, b)]
+            if conflicting:
+                a, b = conflicting[0]
+                out.append(Finding(
+                    rule="JL004", path=mod.path, line=b.lineno,
+                    col=b.col_offset + 1, symbol=mod.symbol_for(b),
+                    message=f"PRNG key {key!r} is consumed here and at "
+                            f"line {a.lineno} without fold_in/split in "
+                            f"between: the two draws are identical "
+                            f"(correlated randomness)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JL006 — hash() into key derivation
+# ---------------------------------------------------------------------------
+
+def _check_hash_keys(mod: astutil.Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = astutil.call_name(node) or ""
+        if not (name in _KEY_MAKERS
+                or name.endswith((".fold_in", ".PRNGKey"))):
+            continue
+        for arg in node.args:
+            for sub in ast.walk(arg):
+                if (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Name)
+                        and sub.func.id == "hash"):
+                    out.append(Finding(
+                        rule="JL006", path=mod.path, line=sub.lineno,
+                        col=sub.col_offset + 1,
+                        symbol=mod.symbol_for(node),
+                        message="hash() feeds a PRNG key: str/bytes "
+                                "hashes are randomized per process "
+                                "(PYTHONHASHSEED), so the stream is "
+                                "not reproducible across runs; use "
+                                "zlib.crc32 of the encoded string"))
+    return out
+
+
+def check(modules: Iterable[astutil.Module]) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in modules:
+        out.extend(_check_traced_scopes(mod))
+        out.extend(_check_tick_paths(mod))
+        out.extend(_check_builder_captures(mod))
+        out.extend(_check_key_reuse(mod))
+        out.extend(_check_hash_keys(mod))
+    return out

@@ -1,0 +1,379 @@
+"""Pallas kernel contract checker (rule family PK).
+
+Statically extracts every ``pl.pallas_call`` in the analyzed files —
+its grid (plain ``grid=`` or ``pltpu.PrefetchScalarGridSpec``),
+BlockSpecs, scratch shapes, and the kernel function (resolved through
+``functools.partial``) — and verifies the contracts the WTA-CRS
+kernels rely on:
+
+  PK001  index_map arity matches the grid (plus scalar-prefetch refs)
+  PK002  block_shape rank matches the index_map's returned tuple
+  PK003  a ``//``-derived grid needs an explicit divisibility guard in
+         the wrapper (assert or raise on ``%``) — silent remainder
+         truncation is how an unbiased estimator quietly drops rows
+  PK004  estimated per-step VMEM footprint (pipeline-double-buffered
+         blocks + scratch) exceeds the budget (~16 MB/core on TPU)
+  PK005  MXU matmul in a kernel body without
+         ``preferred_element_type=jnp.float32`` — bf16 accumulation
+         breaks the f32-accumulator contract of the estimator path
+
+Shape arithmetic is evaluated with the wrapper's parameter defaults;
+unknown dimensions (runtime shapes) assume 128 and the estimate is
+labeled as such.  The point is catching order-of-magnitude VMEM
+mistakes at review time, not byte-exact accounting.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.findings import (ERROR, WARNING, Finding,
+                                     register_rule)
+
+PK001 = register_rule("PK001", ERROR,
+                      "BlockSpec index_map arity mismatches grid")
+PK002 = register_rule("PK002", ERROR,
+                      "block_shape rank mismatches index_map output")
+PK003 = register_rule("PK003", ERROR,
+                      "//-derived grid without divisibility guard")
+PK004 = register_rule("PK004", WARNING,
+                      "estimated VMEM footprint exceeds budget")
+PK005 = register_rule("PK005", ERROR,
+                      "kernel matmul without f32 accumulation")
+
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024   # ~16 MB/core (TPU v4/v5)
+_ASSUMED_DIM = 128
+_MXU_CALLS = ("dot_general", "dot", "matmul", "einsum")
+
+
+@dataclasses.dataclass
+class BlockSpecInfo:
+    node: ast.Call
+    block_shape: Optional[ast.expr]      # Tuple expr or None
+    index_map: Optional[ast.expr]        # Lambda or None
+    memory_space_only: bool
+
+
+@dataclasses.dataclass
+class PallasCallInfo:
+    mod: astutil.Module
+    call: ast.Call
+    wrapper: Optional[ast.FunctionDef]
+    kernel: Optional[ast.FunctionDef]
+    grid: Optional[ast.expr]
+    num_scalar_prefetch: int
+    in_specs: List[BlockSpecInfo]
+    out_specs: List[BlockSpecInfo]
+    scratch_shapes: List[ast.expr]
+
+    @property
+    def where(self) -> str:
+        return (self.wrapper.name if self.wrapper is not None
+                else "<module>")
+
+
+def _resolve_function(mod: astutil.Module,
+                      node: ast.expr) -> Optional[ast.FunctionDef]:
+    target = node
+    if isinstance(node, ast.Call) and (
+            astutil.call_name(node) or "").endswith("partial"):
+        if not node.args:
+            return None
+        target = node.args[0]
+    if isinstance(target, ast.Name):
+        for fn in mod.functions():
+            if fn.name == target.id:
+                return fn
+    return None
+
+
+def _blockspec(node: ast.expr) -> Optional[BlockSpecInfo]:
+    if not isinstance(node, ast.Call):
+        return None
+    name = astutil.call_name(node) or ""
+    if not name.endswith("BlockSpec"):
+        return None
+    shape = node.args[0] if node.args else astutil.keyword_arg(
+        node, "block_shape")
+    imap = node.args[1] if len(node.args) > 1 else astutil.keyword_arg(
+        node, "index_map")
+    mem_only = (shape is None and imap is None
+                and astutil.keyword_arg(node, "memory_space") is not None)
+    if shape is not None and not isinstance(shape, ast.Tuple):
+        # a memory_space positional (pl.ANY) — not a block shape
+        if astutil.dotted(shape) is not None:
+            return BlockSpecInfo(node, None, None, True)
+    return BlockSpecInfo(node, shape if isinstance(shape, ast.Tuple)
+                         else None, imap, mem_only)
+
+
+def _spec_list(node: Optional[ast.expr]) -> List[BlockSpecInfo]:
+    if node is None:
+        return []
+    elems = node.elts if isinstance(node, (ast.List, ast.Tuple)) else [node]
+    out = []
+    for e in elems:
+        info = _blockspec(e)
+        if info is not None:
+            out.append(info)
+    return out
+
+
+def extract_pallas_calls(mod: astutil.Module) -> List[PallasCallInfo]:
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = astutil.call_name(node) or ""
+        if not name.endswith("pallas_call"):
+            continue
+        wrapper = None
+        cur = mod.parent(node)
+        while cur is not None:
+            if isinstance(cur, ast.FunctionDef):
+                wrapper = cur
+                break
+            cur = mod.parent(cur)
+        grid = astutil.keyword_arg(node, "grid")
+        in_specs = astutil.keyword_arg(node, "in_specs")
+        out_specs = astutil.keyword_arg(node, "out_specs")
+        scratch = astutil.keyword_arg(node, "scratch_shapes")
+        npf = 0
+        gspec = astutil.keyword_arg(node, "grid_spec")
+        if isinstance(gspec, ast.Call):
+            grid = astutil.keyword_arg(gspec, "grid") or grid
+            in_specs = astutil.keyword_arg(gspec, "in_specs") or in_specs
+            out_specs = astutil.keyword_arg(gspec, "out_specs") or out_specs
+            scratch = astutil.keyword_arg(gspec, "scratch_shapes") or scratch
+            pf = astutil.keyword_arg(gspec, "num_scalar_prefetch")
+            if isinstance(pf, ast.Constant) and isinstance(pf.value, int):
+                npf = pf.value
+        # resolve grid through a wrapper-local assignment
+        if isinstance(grid, ast.Name) and wrapper is not None:
+            grid = astutil.assignments(wrapper).get(grid.id, grid)
+        kernel = _resolve_function(mod, node.args[0]) if node.args else None
+        out.append(PallasCallInfo(
+            mod=mod, call=node, wrapper=wrapper, kernel=kernel,
+            grid=grid, num_scalar_prefetch=npf,
+            in_specs=_spec_list(in_specs),
+            out_specs=_spec_list(out_specs),
+            scratch_shapes=(scratch.elts if isinstance(
+                scratch, (ast.List, ast.Tuple)) else [])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PK001 / PK002 — index map consistency
+# ---------------------------------------------------------------------------
+
+def _lambda_arity(lam: ast.Lambda) -> Tuple[int, bool]:
+    """(#params without defaults, has_vararg)."""
+    a = lam.args
+    required = len(a.posonlyargs) + len(a.args) - len(a.defaults)
+    return required, a.vararg is not None
+
+
+def _check_specs(info: PallasCallInfo, grid_len: Optional[int]
+                 ) -> List[Finding]:
+    out: List[Finding] = []
+    mod = info.mod
+    for role, specs in (("in", info.in_specs), ("out", info.out_specs)):
+        for i, spec in enumerate(specs):
+            if spec.memory_space_only:
+                continue
+            where = f"{info.where} ({role}_specs[{i}])"
+            lam = spec.index_map
+            if isinstance(lam, ast.Lambda) and grid_len is not None:
+                required, vararg = _lambda_arity(lam)
+                allowed = {grid_len, grid_len + info.num_scalar_prefetch}
+                ok = (required <= max(allowed) if vararg
+                      else required in allowed)
+                if not ok:
+                    out.append(Finding(
+                        rule="PK001", path=mod.path, line=lam.lineno,
+                        col=lam.col_offset + 1,
+                        symbol=mod.symbol_for(spec.node),
+                        message=f"{where}: index_map takes {required} "
+                                f"args but the grid has {grid_len} "
+                                f"dims (+{info.num_scalar_prefetch} "
+                                f"scalar-prefetch refs); wrong arity "
+                                f"silently misaddresses blocks"))
+            if (isinstance(lam, ast.Lambda)
+                    and isinstance(spec.block_shape, ast.Tuple)):
+                rank = (len(lam.body.elts)
+                        if isinstance(lam.body, ast.Tuple) else 1)
+                brank = len(spec.block_shape.elts)
+                if rank != brank:
+                    out.append(Finding(
+                        rule="PK002", path=mod.path, line=lam.lineno,
+                        col=lam.col_offset + 1,
+                        symbol=mod.symbol_for(spec.node),
+                        message=f"{where}: block_shape has rank "
+                                f"{brank} but index_map returns "
+                                f"{rank} indices; Pallas pairs them "
+                                f"positionally"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PK003 — divisibility guards
+# ---------------------------------------------------------------------------
+
+def _has_divisibility_guard(wrapper: ast.FunctionDef) -> bool:
+    def mentions_mod(expr: ast.AST) -> bool:
+        return any(isinstance(n, ast.BinOp)
+                   and isinstance(n.op, ast.Mod)
+                   for n in ast.walk(expr))
+
+    for node in ast.walk(wrapper):
+        if isinstance(node, ast.Assert) and mentions_mod(node.test):
+            return True
+        if isinstance(node, ast.If) and mentions_mod(node.test):
+            if any(isinstance(n, ast.Raise) for n in ast.walk(node)):
+                return True
+    return False
+
+
+def _check_grid_divisibility(info: PallasCallInfo) -> List[Finding]:
+    if not isinstance(info.grid, ast.Tuple) or info.wrapper is None:
+        return []
+    divs = [e for e in info.grid.elts
+            if any(isinstance(n, ast.BinOp)
+                   and isinstance(n.op, ast.FloorDiv)
+                   for n in ast.walk(e))]
+    if not divs or _has_divisibility_guard(info.wrapper):
+        return []
+    mod = info.mod
+    dims = ", ".join(ast.unparse(d) for d in divs)
+    return [Finding(
+        rule="PK003", path=mod.path, line=info.grid.lineno,
+        col=info.grid.col_offset + 1,
+        symbol=mod.symbol_for(info.call),
+        message=f"grid dims ({dims}) floor-divide the array shape but "
+                f"{info.where} has no divisibility guard: a remainder "
+                f"is silently dropped from the reduction (biased "
+                f"estimator); assert `x % block == 0` or raise")]
+
+
+# ---------------------------------------------------------------------------
+# PK004 — VMEM footprint estimate
+# ---------------------------------------------------------------------------
+
+def _shape_env(wrapper: Optional[ast.FunctionDef]) -> Dict[str, int]:
+    env: Dict[str, int] = {}
+    if wrapper is None:
+        return env
+    for name, default in astutil.param_defaults(wrapper).items():
+        if isinstance(default, ast.Constant) and isinstance(
+                default.value, int):
+            env[name] = default.value
+    # fold simple wrapper assignments the defaults can resolve
+    ev = astutil.ConstEvaluator(env)
+    for name, expr in astutil.assignments(wrapper).items():
+        val = ev.eval(expr)
+        if val is not None:
+            env.setdefault(name, val)
+    return env
+
+
+def _tuple_bytes(shape: ast.expr, ev: astutil.ConstEvaluator,
+                 dtype_bytes: int) -> Optional[int]:
+    if not isinstance(shape, ast.Tuple):
+        return None
+    total = dtype_bytes
+    for e in shape.elts:
+        v = ev.eval(e)
+        if v is None:
+            return None
+        total *= max(v, 1)
+    return total
+
+
+def _check_vmem(info: PallasCallInfo, budget: int) -> List[Finding]:
+    env = _shape_env(info.wrapper)
+    ev = astutil.ConstEvaluator(env, assume=_ASSUMED_DIM)
+    total = 0
+    # pipeline blocks are double-buffered: x2 per in/out spec
+    for spec in info.in_specs + info.out_specs:
+        if spec.block_shape is None:
+            continue
+        nbytes = _tuple_bytes(spec.block_shape, ev, 4)
+        if nbytes is not None:
+            total += 2 * nbytes
+    for s in info.scratch_shapes:
+        if not isinstance(s, ast.Call):
+            continue
+        name = astutil.call_name(s) or ""
+        if not name.endswith("VMEM") or not s.args:
+            continue
+        dt = astutil.dtype_bytes(s.args[1] if len(s.args) > 1 else None)
+        nbytes = _tuple_bytes(s.args[0], ev, dt)
+        if nbytes is not None:
+            total += nbytes
+    if total <= budget:
+        return []
+    mod = info.mod
+    assumed = ""
+    if ev.assumed:
+        names = sorted(set(ev.assumed))
+        assumed = (f" (assuming {_ASSUMED_DIM} for runtime dims "
+                   f"{', '.join(names)})")
+    return [Finding(
+        rule="PK004", path=mod.path, line=info.call.lineno,
+        col=info.call.col_offset + 1, symbol=mod.symbol_for(info.call),
+        message=f"estimated per-step VMEM footprint ~{total // 1024} KiB"
+                f"{assumed} exceeds the {budget // (1024 * 1024)} MiB "
+                f"budget; shrink blocks or spill to pl.ANY + DMA")]
+
+
+# ---------------------------------------------------------------------------
+# PK005 — f32 accumulation in kernel bodies
+# ---------------------------------------------------------------------------
+
+def _check_kernel_matmuls(info: PallasCallInfo) -> List[Finding]:
+    if info.kernel is None:
+        return []
+    out: List[Finding] = []
+    mod = info.mod
+    for node in ast.walk(info.kernel):
+        if not isinstance(node, ast.Call):
+            continue
+        name = astutil.call_name(node) or ""
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf not in _MXU_CALLS:
+            continue
+        pet = astutil.keyword_arg(node, "preferred_element_type")
+        pet_name = astutil.dotted(pet) if pet is not None else None
+        if pet_name is None or not pet_name.endswith("float32"):
+            out.append(Finding(
+                rule="PK005", path=mod.path, line=node.lineno,
+                col=node.col_offset + 1, symbol=mod.symbol_for(node),
+                message=f"{leaf}() in kernel {info.kernel.name!r} "
+                        f"without preferred_element_type=jnp.float32: "
+                        f"bf16 inputs would accumulate in bf16 on the "
+                        f"MXU, breaking the unbiased-estimator f32 "
+                        f"accumulation contract"))
+    return out
+
+
+def check(modules: Iterable[astutil.Module],
+          vmem_budget: Optional[int] = None) -> List[Finding]:
+    if vmem_budget is None:
+        vmem_budget = DEFAULT_VMEM_BUDGET
+    out: List[Finding] = []
+    seen_kernels = set()
+    for mod in modules:
+        for info in extract_pallas_calls(mod):
+            grid_len = (len(info.grid.elts)
+                        if isinstance(info.grid, ast.Tuple) else None)
+            out.extend(_check_specs(info, grid_len))
+            out.extend(_check_grid_divisibility(info))
+            out.extend(_check_vmem(info, vmem_budget))
+            if info.kernel is not None:
+                key = (mod.path, info.kernel.name)
+                if key not in seen_kernels:
+                    seen_kernels.add(key)
+                    out.extend(_check_kernel_matmuls(info))
+    return out

@@ -1,0 +1,318 @@
+"""Policy / tag cross-checker (rule family PT).
+
+Tag-glob rules (``repro.core.policy``) silently decay: a registry
+rename turns ``"*mlp_*"`` into a rule that matches nothing, and the run
+trains at the fallback config without a word.  This checker evaluates
+every *literal* policy-rule pattern found in the analyzed files against
+the tags each ``models/registry.py`` architecture actually emits (the
+same ``tag_recorder`` + ``eval_shape`` enumeration the znorm cache
+uses — zero FLOPs, a few seconds for all architectures).
+
+  PT001  dead rule: pattern matches no tag of any architecture
+  PT002  uncovered sampled-dense tags: a rules-carrying policy leaves
+         token-dim tags to the fallback (note; warning when the policy
+         declares ``default=`` and thereby claims coverage)
+  PT003  CACHED_GRAD rule matching a rows-dim tag (MoE-router class):
+         the cache is keyed per dataset sample, a rows-dim tag has no
+         cache column to read — the rule can never be honored
+  PT004  shadowed rule: every tag it matches is claimed by an earlier
+         rule (first-match-wins makes it unreachable)
+
+Only string-literal patterns are checked; dynamically built patterns
+are skipped.  The tag universe can be injected (tests) or computed
+live from ``repro.configs`` (default).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.findings import (ERROR, NOTE, WARNING, Finding,
+                                     register_rule)
+
+PT001 = register_rule("PT001", ERROR, "dead tag-glob rule")
+PT002 = register_rule("PT002", NOTE, "uncovered sampled-dense tags")
+PT003 = register_rule("PT003", ERROR, "CACHED_GRAD rule on rows-dim tag")
+PT004 = register_rule("PT004", WARNING, "rule shadowed by earlier rules")
+
+# {arch name: {tag: "token" | "rows"}}
+TagUniverse = Dict[str, Dict[str, str]]
+
+_universe_cache: Optional[TagUniverse] = None
+
+
+def tag_universe(reduced: bool = True) -> TagUniverse:
+    """Tags each registry architecture emits, with sampled dims.
+
+    Imports ``repro`` (and jax) lazily; traces every config once under
+    ``eval_shape`` with the tag recorder active.  Cached per process.
+    """
+    global _universe_cache
+    if _universe_cache is not None:
+        return _universe_cache
+    import jax
+
+    from repro import configs
+    from repro.models import common as cm
+    from repro.models import registry
+    from repro.core.config import EstimatorKind, WTACRSConfig
+
+    trace_policy = cm.Policy(wtacrs=WTACRSConfig(
+        kind=EstimatorKind.WTA_CRS, budget=0.5, min_rows=1))
+    universe: TagUniverse = {}
+    for name in configs.ARCH_NAMES:
+        cfg = configs.get_config(name, reduced=reduced)
+        batch = registry.train_batch_specs(
+            cfg, 2, 2 * len(cfg.pattern) * 4)
+        rec = cm.tag_recorder()
+        with rec as tags:
+            jax.eval_shape(
+                lambda p, b, c=cfg: registry.loss_fn(
+                    c, p, b, trace_policy, key=jax.random.PRNGKey(0))[0],
+                registry.abstract_params(cfg)[0], batch)
+        universe[name] = {t: rec.dims[t] for t in tags}
+    _universe_cache = universe
+    return universe
+
+
+# ---------------------------------------------------------------------------
+# literal extraction
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RuleLit:
+    pattern: str
+    line: int
+    col: int
+    cached_grad: bool
+    exact: bool
+
+
+@dataclasses.dataclass
+class PolicyLit:
+    mod: astutil.Module
+    node: ast.Call
+    rules: List[RuleLit]
+    has_default: bool
+
+    @property
+    def symbol(self) -> str:
+        return self.mod.symbol_for(self.node)
+
+
+def _resolve_name(mod: astutil.Module, node: ast.expr,
+                  scope: Optional[ast.AST]) -> ast.expr:
+    """Follow one level of Name -> assignment (module or function)."""
+    if not isinstance(node, ast.Name):
+        return node
+    if scope is not None:
+        local = astutil.assignments(scope).get(node.id)
+        if local is not None:
+            return local
+    top = astutil.assignments(mod.tree).get(node.id)
+    return top if top is not None else node
+
+
+def _cfg_flags(mod: astutil.Module, node: Optional[ast.expr],
+               scope: Optional[ast.AST]) -> Tuple[bool, bool]:
+    """(cached_grad, exact) mentioned anywhere in a config expression."""
+    if node is None:
+        return False, False
+    node = _resolve_name(mod, node, scope)
+    cached = exact = False
+    for sub in ast.walk(node):
+        name = astutil.dotted(sub)
+        if name is None:
+            continue
+        if name.endswith("CACHED_GRAD"):
+            cached = True
+        if name.endswith("EXACT"):
+            exact = True
+    return cached, exact
+
+
+def _rule_from_args(mod: astutil.Module, args: Sequence[ast.expr],
+                    keywords: Sequence[ast.keyword],
+                    scope: Optional[ast.AST],
+                    node: ast.AST) -> Optional[RuleLit]:
+    pattern: Optional[ast.expr] = args[0] if args else None
+    cfg: Optional[ast.expr] = args[1] if len(args) > 1 else None
+    for kw in keywords:
+        if kw.arg == "pattern":
+            pattern = kw.value
+        elif kw.arg == "config":
+            cfg = kw.value
+    if not (isinstance(pattern, ast.Constant)
+            and isinstance(pattern.value, str)):
+        return None
+    cached, exact = _cfg_flags(mod, cfg, scope)
+    # overrides dict may carry norm_source directly as a keyword too
+    for kw in keywords:
+        if kw.arg == "norm_source":
+            c2, _ = _cfg_flags(mod, kw.value, scope)
+            cached = cached or c2
+    return RuleLit(pattern=pattern.value, line=node.lineno,
+                   col=node.col_offset + 1, cached_grad=cached,
+                   exact=exact)
+
+
+def extract_policies(mod: astutil.Module) -> List[PolicyLit]:
+    out: List[PolicyLit] = []
+    claimed: set = set()
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = astutil.call_name(node) or ""
+        if not name.endswith("PolicyRules.of"):
+            continue
+        scope = None
+        cur = mod.parent(node)
+        while cur is not None:
+            if isinstance(cur, ast.FunctionDef):
+                scope = cur
+                break
+            cur = mod.parent(cur)
+        rules: List[RuleLit] = []
+        for entry in node.args:
+            if isinstance(entry, ast.Starred):
+                continue
+            if isinstance(entry, ast.Tuple) and entry.elts:
+                r = _rule_from_args(mod, entry.elts, [], scope, entry)
+            elif isinstance(entry, ast.Call):
+                claimed.add(id(entry))
+                r = _rule_from_args(mod, entry.args, entry.keywords,
+                                    scope, entry)
+            else:
+                r = None
+            if r is not None:
+                rules.append(r)
+        default = astutil.keyword_arg(node, "default")
+        has_default = default is not None and not (
+            isinstance(default, ast.Constant) and default.value is None)
+        if rules:
+            out.append(PolicyLit(mod=mod, node=node, rules=rules,
+                                 has_default=has_default))
+    # standalone Rule.of / Rule calls outside any PolicyRules.of literal
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or id(node) in claimed:
+            continue
+        name = astutil.call_name(node) or ""
+        if name.endswith("Rule.of") or name.endswith(".Rule") \
+                or name == "Rule":
+            scope = None
+            cur = mod.parent(node)
+            while cur is not None:
+                if isinstance(cur, ast.FunctionDef):
+                    scope = cur
+                    break
+                cur = mod.parent(cur)
+            inside = any(id(node) != id(p.node)
+                         and any(id(node) == id(s)
+                                 for s in ast.walk(p.node))
+                         for p in out)
+            if inside:
+                continue
+            r = _rule_from_args(mod, node.args, node.keywords, scope,
+                                node)
+            if r is not None:
+                out.append(PolicyLit(mod=mod, node=node, rules=[r],
+                                     has_default=False))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+def _matches(pattern: str, tag: str) -> bool:
+    return fnmatch.fnmatchcase(tag, pattern)
+
+
+def check_policies(policies: Iterable[PolicyLit],
+                   universe: TagUniverse) -> List[Finding]:
+    all_tags: Dict[str, str] = {}
+    for tags in universe.values():
+        all_tags.update(tags)
+
+    out: List[Finding] = []
+    for pol in policies:
+        mod = pol.mod
+        matched_before: set = set()
+        for i, rule in enumerate(pol.rules):
+            matched = {t for t in all_tags if _matches(rule.pattern, t)}
+            if not matched:
+                out.append(Finding(
+                    rule="PT001", path=mod.path, line=rule.line,
+                    col=rule.col, symbol=pol.symbol,
+                    message=f"rule pattern {rule.pattern!r} matches no "
+                            f"tag emitted by any registry architecture "
+                            f"(checked {len(universe)} configs, "
+                            f"{len(all_tags)} distinct tags): the rule "
+                            f"is dead and the fallback config applies "
+                            f"silently"))
+            else:
+                # First match wins: a tag claimed by an earlier rule
+                # never reaches this one, so judge only the remainder.
+                effective = matched - matched_before
+                rows_hit = sorted(t for t in effective
+                                  if all_tags[t] == "rows")
+                if rule.cached_grad and rows_hit:
+                    out.append(Finding(
+                        rule="PT003", path=mod.path, line=rule.line,
+                        col=rule.col, symbol=pol.symbol,
+                        message=f"rule {rule.pattern!r} resolves "
+                                f"norm_source=CACHED_GRAD for rows-dim "
+                                f"tag(s) {', '.join(rows_hit[:4])}: "
+                                f"the per-sample gradient-norm cache "
+                                f"has no column for a flattened-rows "
+                                f"plan, so the rule can never be "
+                                f"honored (it degrades to activation "
+                                f"norms mid-run)"))
+                if matched and matched <= matched_before:
+                    out.append(Finding(
+                        rule="PT004", path=mod.path, line=rule.line,
+                        col=rule.col, symbol=pol.symbol,
+                        message=f"rule {rule.pattern!r} is unreachable: "
+                                f"every tag it matches is claimed by an "
+                                f"earlier rule (first match wins)"))
+                matched_before |= matched
+        if len(pol.rules) > 1 or pol.has_default:
+            uncovered = {}
+            for arch, tags in universe.items():
+                miss = sorted(
+                    t for t, dim in tags.items()
+                    if dim == "token"
+                    and not any(_matches(r.pattern, t)
+                                for r in pol.rules))
+                if miss:
+                    uncovered[arch] = miss
+            if uncovered:
+                n_archs = len(uncovered)
+                example_arch = sorted(uncovered)[0]
+                ex = ", ".join(uncovered[example_arch][:4])
+                sev_rule = "PT002"
+                out.append(Finding(
+                    rule=sev_rule, path=mod.path, line=pol.node.lineno,
+                    col=pol.node.col_offset + 1, symbol=pol.symbol,
+                    severity=WARNING if pol.has_default else NOTE,
+                    message=f"policy rules leave sampled-dense "
+                            f"(token-dim) tags to the fallback in "
+                            f"{n_archs}/{len(universe)} architectures "
+                            f"(e.g. {example_arch}: {ex}); add a rule "
+                            f"or confirm the fallback is intended"))
+    return out
+
+
+def check(modules: Iterable[astutil.Module],
+          universe: Optional[TagUniverse] = None) -> List[Finding]:
+    policies: List[PolicyLit] = []
+    for mod in modules:
+        policies.extend(extract_policies(mod))
+    if not policies:
+        return []
+    if universe is None:
+        universe = tag_universe()
+    return check_policies(policies, universe)

@@ -17,7 +17,7 @@ checkpointing ALL of it so kill/resume is bit-faithful.
 The low-level builders (``launch.train_steps``, ``train.znorm``,
 ``train.checkpoint``) stay public; the façade only composes them.
 """
-from repro.api.spec import DataSpec, RunSpec, ServeSpec
 from repro.api.run import Run
+from repro.api.spec import DataSpec, RunSpec, ServeSpec
 
 __all__ = ["DataSpec", "Run", "RunSpec", "ServeSpec"]

@@ -28,11 +28,11 @@ import jax.numpy as jnp
 
 from repro.api.spec import RunSpec
 from repro.configs import get_config
-from repro.models import registry
-from repro.train import checkpoint, znorm
 from repro.launch import mesh as mesh_lib
 from repro.launch import report as report_lib
 from repro.launch import train_steps
+from repro.models import registry
+from repro.train import checkpoint, znorm
 
 
 class Run:

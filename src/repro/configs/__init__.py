@@ -3,8 +3,11 @@
 Each module exposes CONFIG (exact published hyper-parameters) and
 REDUCED (same family, CPU-smoke-test sized).
 """
-from repro.configs.base import (ArchConfig, InputShape, SHAPES,
+from repro.configs.base import (SHAPES, ArchConfig, InputShape,
                                 shape_applicable)
+
+__all__ = ["ArchConfig", "InputShape", "SHAPES", "shape_applicable",
+           "ARCHS", "ARCH_NAMES", "get_config"]
 
 _ARCH_MODULES = [
     "dbrx_132b", "granite_moe_1b_a400m", "nemotron_4_15b", "qwen2_5_3b",

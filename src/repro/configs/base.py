@@ -7,7 +7,7 @@ provides a ``reduced()`` variant of the same family for CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax.numpy as jnp
 

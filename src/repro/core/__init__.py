@@ -5,25 +5,25 @@ Estimator dispatch is open: plan builders register by name in
 ``estimators_extra``) and per-layer selection/scheduling lives in
 ``policy``.
 """
-from repro.core.config import (EstimatorKind, NormSource, WTACRSConfig,
-                               EXACT_CONFIG)
+from repro.core import estimators_extra as _estimators_extra  # noqa: F401
+from repro.core.config import (EXACT_CONFIG, EstimatorKind, NormSource,
+                               WTACRSConfig)
+from repro.core.controller import (BudgetController, ConditionRate,
+                                   ESSProportional, FixedSchedule, TagStats)
 from repro.core.estimator_registry import (EstimatorSpec, get_estimator,
                                            register_estimator,
                                            registered_estimators)
-from repro.core.plans import (SamplePlan, column_row_probabilities, crs_plan,
-                              det_topk_plan, wtacrs_plan, build_plan,
-                              optimal_c_size)
-from repro.core import estimators_extra as _estimators_extra  # noqa: F401
-from repro.core.estimators import (approx_matmul, apply_plan, exact_matmul,
-                                   crs_variance, wtacrs_variance_bound,
+from repro.core.estimators import (apply_plan, approx_matmul, crs_variance,
+                                   empirical_estimator_stats, exact_matmul,
                                    theorem2_condition,
-                                   empirical_estimator_stats)
-from repro.core.linear import (wtacrs_linear, wtacrs_linear_shared,
-                               read_grad_norm_tap)
+                                   wtacrs_variance_bound)
+from repro.core.linear import (read_grad_norm_tap, wtacrs_linear,
+                               wtacrs_linear_shared)
 from repro.core.lora import LoRAConfig, init_lora_params, lora_linear
+from repro.core.plans import (SamplePlan, build_plan,
+                              column_row_probabilities, crs_plan,
+                              det_topk_plan, optimal_c_size, wtacrs_plan)
 from repro.core.policy import BudgetSchedule, PolicyRules, Rule
-from repro.core.controller import (BudgetController, ConditionRate,
-                                   ESSProportional, FixedSchedule, TagStats)
 
 __all__ = [
     "EstimatorKind", "NormSource", "WTACRSConfig", "EXACT_CONFIG",

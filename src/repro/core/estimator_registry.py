@@ -29,7 +29,7 @@ a sampling plan, short-circuited by dispatch sites via ``is_exact``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict
 
 
 def kind_name(kind) -> str:

@@ -48,7 +48,8 @@ def approx_matmul(x: jax.Array, y: jax.Array, cfg: WTACRSConfig,
 # Theory utilities (used by the Fig. 3 / Theorem 2 benchmarks + tests)
 # ---------------------------------------------------------------------------
 
-def crs_variance(x: jax.Array, y: jax.Array, p: jax.Array, k: int) -> jax.Array:
+def crs_variance(x: jax.Array, y: jax.Array, p: jax.Array,
+                 k: int) -> jax.Array:
     """Closed-form total variance of the CRS estimator (Appendix C.1):
 
         Var[g] = (1/k) [ sum_i ||X_:,i||^2 ||Y_i,:||^2 / p_i  -  ||XY||_F^2 ]
@@ -63,7 +64,7 @@ def crs_variance(x: jax.Array, y: jax.Array, p: jax.Array, k: int) -> jax.Array:
 
 def wtacrs_variance_bound(x: jax.Array, y: jax.Array, p: jax.Array,
                           k: int) -> jax.Array:
-    """Upper bound from Eq. (20): Var[ĝ] <= (1-sum_C p)/(k-|C|) * k * Var[g]."""
+    """Eq. (20) bound: Var[ĝ] <= (1-sum_C p)/(k-|C|) * k * Var[g]."""
     order = jnp.argsort(-p)
     csum = jnp.cumsum(p[order])
     c_star = plans_lib.optimal_c_size(csum, k)

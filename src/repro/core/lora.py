@@ -42,7 +42,8 @@ class LoRAConfig:
 def init_lora_params(key: jax.Array, d_in: int, d_out: int, rank: int,
                      dtype=jnp.float32):
     """A ~ N(0, 1/r), B = 0 (so the adapter starts as identity)."""
-    a = jax.random.normal(key, (d_in, rank), dtype) / jnp.sqrt(rank).astype(dtype)
+    a = (jax.random.normal(key, (d_in, rank), dtype)
+         / jnp.sqrt(rank).astype(dtype))
     b = jnp.zeros((rank, d_out), dtype)
     return {"lora_a": a, "lora_b": b}
 
@@ -53,7 +54,7 @@ def lora_linear(h: jax.Array, w: jax.Array, lora_a: jax.Array,
                 znorm: Optional[jax.Array] = None,
                 cfg: WTACRSConfig = WTACRSConfig(),
                 bias: Optional[jax.Array] = None) -> jax.Array:
-    """Frozen base linear + trainable low-rank update, both memory-efficient."""
+    """Frozen base linear + trainable low-rank update, memory-efficient."""
     w_frozen = jax.lax.stop_gradient(w)
     z = jnp.einsum("...sd,de->...se", h, w_frozen)
     if bias is not None:

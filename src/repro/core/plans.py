@@ -4,7 +4,7 @@ A *plan* is a static-shape description of which k column-row pairs of an
 m-term contraction participate in the approximated GEMM and with what
 scale:
 
-    GEMM(X, Y) = sum_i X[:, i] Y[i, :]  ~=  sum_t  scale_t X[:, idx_t] Y[idx_t, :]
+    GEMM(X, Y) = sum_i X[:,i] Y[i,:] ~= sum_t scale_t X[:,idx_t] Y[idx_t,:]
 
 Three plan builders are provided:
 

@@ -89,7 +89,10 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
     skv = k.shape[1]
     bq = min(bq, sq)
     bk = min(bk, skv)
-    assert sq % bq == 0 and skv % bk == 0
+    if sq % bq or skv % bk:
+        raise ValueError(
+            f"flash_attention seq lens (q={sq}, kv={skv}) must tile "
+            f"evenly by (bq={bq}, bk={bk}); pad first (ops.py does)")
     grid = (bh, sq // bq, skv // bk)
     scale = 1.0 / math.sqrt(dh)
     return pl.pallas_call(

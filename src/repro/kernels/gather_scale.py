@@ -16,8 +16,6 @@ each DMA chunk VMEM-sized.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -36,6 +34,11 @@ def gather_scale(x: jax.Array, idx: jax.Array, scale: jax.Array, *,
     n, d = x.shape
     k = idx.shape[0]
     block_d = min(block_d, d)
+    if d % block_d:
+        raise ValueError(
+            f"gather_scale feature dim {d} must tile evenly by "
+            f"block_d={block_d}; trailing columns would be silently "
+            f"dropped from the gather — pad first (ops.py does)")
     grid = (k, d // block_d)
     return pl.pallas_call(
         _gather_kernel,

@@ -40,6 +40,11 @@ def row_norms(x: jax.Array, *, block_rows: int = 256, block_d: int = 512,
     n, d = x.shape
     block_rows = min(block_rows, n)
     block_d = min(block_d, d)
+    if n % block_rows or d % block_d:
+        raise ValueError(
+            f"row_norms shape ({n}, {d}) must tile evenly by "
+            f"({block_rows}, {block_d}); a remainder would be silently "
+            f"dropped from the sum of squares — pad first (ops.py does)")
     grid = (n // block_rows, d // block_d)
     return pl.pallas_call(
         functools.partial(_row_norms_kernel, nsteps=grid[1]),

@@ -101,6 +101,12 @@ def sampled_matmul(hsub: jax.Array, dz: jax.Array, idx: jax.Array,
     nb, k, d_in = hsub.shape
     d_out = dz.shape[2]
     bm, bn, bk = min(bm, d_in), min(bn, d_out), min(bk, k)
+    if d_in % bm or d_out % bn or k % bk:
+        raise ValueError(
+            f"sampled_matmul shapes (k={k}, d_in={d_in}, d_out={d_out}) "
+            f"must tile evenly by (bk={bk}, bm={bm}, bn={bn}); the "
+            f"remainder would be silently dropped from the reduction — "
+            f"pad first (ops.py does)")
     grid = (d_in // bm, d_out // bn, nb, k // bk)
     return pl.pallas_call(
         functools.partial(_sampled_matmul_kernel, bk=bk, bn=bn,

@@ -25,7 +25,6 @@ import traceback
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.configs.base import SHAPES, shape_applicable

@@ -141,7 +141,6 @@ def _dot_flops(comp: Computation, op: Op) -> float:
     lhs_t = _operand_type(comp, op.operands[0]) if op.operands else ""
     lhs_dims = _shape_dims(lhs_t)
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
-    bm = re.search(r"lhs_batch_dims=\{([\d,]*)\}", op.attrs)
     contract = 1
     if cm and cm.group(1):
         for i in cm.group(1).split(","):

@@ -4,8 +4,6 @@ budget-controller runs.  §Perf is maintained by hand (the iteration
 log)."""
 from __future__ import annotations
 
-import json
-import os
 from typing import List
 
 from repro.launch import roofline

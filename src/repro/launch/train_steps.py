@@ -8,20 +8,19 @@ shard_map specs.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import controller as controller_lib
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_lib
 from repro.models import common as cm
 from repro.models import registry
 from repro.train import compression, optim, znorm
-from repro.launch import mesh as mesh_lib
-from repro.launch import sharding as shard_lib
 
 
 def init_train_state(cfg: ArchConfig, key: jax.Array,

@@ -14,7 +14,6 @@ attention FLOPs at identical numerics.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

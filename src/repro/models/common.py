@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

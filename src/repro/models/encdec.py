@@ -9,7 +9,6 @@ encoder output, all with GELU MLPs and pre-LayerNorm.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -6,6 +6,7 @@ allocation — which is what the multi-pod dry-run lowers against.
 """
 from __future__ import annotations
 
+import zlib
 from typing import Any, Dict, Tuple
 
 import jax
@@ -149,7 +150,9 @@ def make_synthetic_batch(cfg: ArchConfig, batch: int, seq: int,
     specs = train_batch_specs(cfg, batch, seq)
     out = {}
     for name, s in specs.items():
-        k = jax.random.fold_in(key, hash(name) % (2 ** 31))
+        # crc32, not hash(): str hashes are salted per process
+        # (PYTHONHASHSEED), which would break batch reproducibility.
+        k = jax.random.fold_in(key, zlib.crc32(name.encode()) % (2 ** 31))
         if s.dtype == jnp.int32 and name in ("tokens", "labels"):
             out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size,
                                            jnp.int32)

@@ -17,7 +17,6 @@ and keep exact gradients (consistent with the paper's scope, Fig. 4).
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

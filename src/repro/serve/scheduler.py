@@ -255,7 +255,9 @@ class Scheduler:
             self.params, self.pool, jnp.asarray(self.page_table),
             jnp.asarray(token), jnp.asarray(pos), jnp.asarray(active),
             jnp.asarray(keys), jnp.asarray(n_gen), jnp.asarray(temp))
-        next_tok = np.asarray(next_tok)
+        # One explicit fetch of the whole token vector; per-slot reads
+        # below then index host memory instead of re-syncing (JL002).
+        next_tok = jax.device_get(next_tok)
         self.stats["decode_steps"] += 1
         self.stats["occupancy_sum"] += len(dec) / m
         now = time.monotonic()

@@ -15,7 +15,7 @@ shards it with the same logical-axis rules as the parameters.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

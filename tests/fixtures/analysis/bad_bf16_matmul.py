@@ -1,0 +1,19 @@
+"""Fixture: kernel matmul without f32 accumulation (PK005)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.matmul(a_ref[...], b_ref[...])  # PK005: bf16 acc
+
+
+def bf16_matmul(a, b):
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (0, 0)),
+                  pl.BlockSpec((128, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((128, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((128, 128), jnp.bfloat16),
+    )(a, b)

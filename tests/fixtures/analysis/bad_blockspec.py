@@ -1,0 +1,20 @@
+"""Fixture: //-derived grid with no divisibility guard (PK003)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scale_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def scale2(x, *, bm=128):
+    n, d = x.shape
+    grid = (n // bm,)  # PK003: remainder rows silently dropped
+    return pl.pallas_call(
+        _scale_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+    )(x)

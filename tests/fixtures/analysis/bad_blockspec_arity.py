@@ -1,0 +1,18 @@
+"""Fixture: index_map arity mismatches the grid (PK001)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def tiled_copy(x):
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i, 0))],  # PK001
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((512, 512), jnp.float32),
+    )(x)

@@ -1,0 +1,11 @@
+"""Fixture: mutable closure capture in a jitted builder product (JL003)."""
+
+
+def make_logging_step(cfg):
+    history = []  # mutable builder state
+
+    def step(state, batch):
+        history.append(1)  # JL003: traced once; later appends invisible
+        return state
+
+    return step

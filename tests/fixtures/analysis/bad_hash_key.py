@@ -1,0 +1,6 @@
+"""Fixture: hash() feeding PRNG key derivation (JL006)."""
+import jax
+
+
+def key_for(key, name):
+    return jax.random.fold_in(key, hash(name) % 1000)  # JL006

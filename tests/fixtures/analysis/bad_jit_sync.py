@@ -1,0 +1,7 @@
+"""Fixture: host sync on a traced value inside a jitted scope (JL001)."""
+import jax
+
+
+@jax.jit
+def loss_scalar(x):
+    return float(x) * 2.0  # JL001: float() forces a host sync under jit

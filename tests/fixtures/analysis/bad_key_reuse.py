@@ -1,0 +1,8 @@
+"""Fixture: PRNG key consumed twice without fold_in/split (JL004)."""
+import jax
+
+
+def two_draws(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # JL004: same key, same stream
+    return a + b

@@ -1,0 +1,13 @@
+"""Fixture: dead tag-glob rule (PT001).
+
+Checked against an injected tag universe in tests (the pattern below
+matches no tag in any universe the repo can emit).
+"""
+from repro.core import PolicyRules
+from repro.core.config import EstimatorKind, WTACRSConfig
+
+CFG = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.3)
+
+RULES = PolicyRules.of(
+    ("*no_such_layer_xyz*", CFG),  # PT001: matches nothing anywhere
+)

@@ -1,0 +1,10 @@
+"""Fixture: CACHED_GRAD rule matching a rows-dim tag (PT003)."""
+from repro.core import PolicyRules
+from repro.core.config import EstimatorKind, NormSource, WTACRSConfig
+
+CFG = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.3,
+                   norm_source=NormSource.CACHED_GRAD)
+
+RULES = PolicyRules.of(
+    ("*moe_router", CFG),  # PT003: no cache column for a rows-dim tag
+)

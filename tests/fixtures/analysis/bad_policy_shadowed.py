@@ -1,0 +1,10 @@
+"""Fixture: rule shadowed by an earlier, broader rule (PT004)."""
+from repro.core import PolicyRules
+from repro.core.config import EstimatorKind, WTACRSConfig
+
+CFG = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.3)
+
+RULES = PolicyRules.of(
+    ("b0/*", CFG),
+    ("b0/attn_q", CFG),  # PT004: first-match-wins, never reached
+)

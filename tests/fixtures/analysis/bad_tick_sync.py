@@ -1,0 +1,12 @@
+"""Fixture: implicit device->host transfer in a scheduler tick (JL002)."""
+import numpy as np
+
+
+class MiniScheduler:
+    def __init__(self, decode_fn):
+        self._decode_fn = decode_fn
+
+    def tick(self, batch):
+        tok = self._decode_fn(batch)
+        tok = np.asarray(tok)  # JL002: hidden blocking sync in the tick
+        return tok

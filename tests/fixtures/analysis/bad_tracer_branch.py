@@ -1,0 +1,10 @@
+"""Fixture: Python branch on a traced value (JL005)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clamp(x):
+    if x > 0:  # JL005: ConcretizationTypeError under jit
+        return x
+    return jnp.zeros_like(x)

@@ -1,0 +1,20 @@
+"""Fixture: per-step VMEM estimate far beyond the budget (PK004)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def huge_copy(x):
+    # 4096x4096 f32 = 64 MiB per block, double-buffered in AND out:
+    # way past any per-core VMEM budget.
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((4096, 4096), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((4096, 4096), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((8192, 8192), jnp.float32),
+    )(x)

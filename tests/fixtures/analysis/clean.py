@@ -1,0 +1,46 @@
+"""Fixture: idiomatic code — every analyzer family must stay silent."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import PolicyRules
+from repro.core.config import EstimatorKind, WTACRSConfig
+
+
+@jax.jit
+def loss(x):
+    return jnp.sum(x * x)
+
+
+def make_step(cfg):
+    scale = float(cfg["scale"])  # host math on static config: fine
+
+    def step(state, key):
+        k1, k2 = jax.random.split(key)
+        noise = jax.random.normal(k1, state.shape)
+        jitter = jax.random.uniform(k2, state.shape)
+        return state + scale * (noise + jitter)
+
+    return step
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def tiled_copy(x, *, bm=128):
+    n, d = x.shape
+    if n % bm:
+        raise ValueError("n must tile evenly by bm")
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(n // bm,),
+        in_specs=[pl.BlockSpec((bm, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+    )(x)
+
+
+RULES = PolicyRules.of(
+    ("b0/attn_q", WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.3)),
+)

@@ -1,0 +1,198 @@
+"""repro.analysis: each rule fires exactly once on its fixture, the
+clean fixture and the real source tree stay silent, the baseline
+round-trips, and the CLI gates exit codes correctly."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import Baseline, analyze_paths
+from repro.analysis.cli import main
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIX = os.path.join(HERE, "fixtures", "analysis")
+REPO = os.path.dirname(HERE)
+SRC = os.path.join(REPO, "src", "repro")
+
+# Synthetic tag universe: what a tiny MoE registry config would emit.
+UNIVERSE = {
+    "toy-moe": {
+        "b0/attn_q": "token",
+        "b0/attn_o": "token",
+        "b0/mlp_up": "token",
+        "b0/moe_router": "rows",
+    },
+}
+
+
+def fixture(name):
+    return os.path.join(FIX, name)
+
+
+def run_fixture(name, **kw):
+    kw.setdefault("tag_universe", UNIVERSE)
+    return analyze_paths([fixture(name)], **kw)
+
+
+# -- one fixture, one finding -------------------------------------------------
+
+@pytest.mark.parametrize("name,rule", [
+    ("bad_jit_sync.py", "JL001"),
+    ("bad_tick_sync.py", "JL002"),
+    ("bad_closure.py", "JL003"),
+    ("bad_key_reuse.py", "JL004"),
+    ("bad_tracer_branch.py", "JL005"),
+    ("bad_hash_key.py", "JL006"),
+    ("bad_blockspec_arity.py", "PK001"),
+    ("bad_blockspec_rank.py", "PK002"),
+    ("bad_blockspec.py", "PK003"),
+    ("bad_vmem.py", "PK004"),
+    ("bad_bf16_matmul.py", "PK005"),
+    ("bad_policy.py", "PT001"),
+    ("bad_policy_cached_rows.py", "PT003"),
+    ("bad_policy_shadowed.py", "PT004"),
+])
+def test_rule_fires_exactly_once(name, rule):
+    findings = run_fixture(name)
+    hits = [f for f in findings if f.rule == rule]
+    assert len(hits) == 1, (
+        f"{name}: expected exactly one {rule}, got "
+        f"{[f.render() for f in findings]}")
+    # and nothing else fires on a single-defect fixture
+    others = [f for f in findings if f.rule != rule]
+    assert not others, [f.render() for f in others]
+
+
+def test_clean_fixture_is_silent():
+    assert run_fixture("clean.py") == []
+
+
+def test_finding_shape():
+    (f,) = run_fixture("bad_jit_sync.py")
+    assert f.rule == "JL001"
+    assert f.severity == "error"
+    assert f.symbol == "loss_scalar"
+    assert f.path.endswith("bad_jit_sync.py")
+    assert f.line > 1
+    rendered = f.render()
+    assert "JL001" in rendered and "bad_jit_sync.py" in rendered
+    assert f.fingerprint() == f.fingerprint()
+    assert len(f.fingerprint()) == 16
+
+
+# -- the real tree ------------------------------------------------------------
+
+def test_source_tree_is_clean():
+    """Acceptance: the analyzers pass on the post-fix repo source."""
+    findings = analyze_paths([SRC], policy=False)
+    gating = [f for f in findings if f.severity in ("error", "warning")]
+    assert not gating, [f.render() for f in gating]
+
+
+def test_source_tree_policy_clean_live_universe():
+    """Policy cross-check against the LIVE registry tag universe."""
+    ex = os.path.join(REPO, "examples")
+    findings = analyze_paths([SRC, ex])
+    gating = [f for f in findings if f.severity in ("error", "warning")]
+    assert not gating, [f.render() for f in gating]
+
+
+# -- baseline -----------------------------------------------------------------
+
+def test_baseline_roundtrip(tmp_path):
+    findings = run_fixture("bad_jit_sync.py")
+    bl = Baseline.from_findings(findings, justification="known; tracked")
+    p = tmp_path / "baseline.json"
+    bl.save(str(p))
+    loaded = Baseline.load(str(p))
+    assert all(loaded.is_suppressed(f) for f in findings)
+    assert loaded.audit() == []  # justified + all hit => no AN002/AN003
+
+
+def test_baseline_unjustified_and_stale(tmp_path):
+    findings = run_fixture("bad_jit_sync.py")
+    bl = Baseline.from_findings(findings)  # empty justification
+    bl.entries.append({"fingerprint": "deadbeefdeadbeef", "rule": "JL001",
+                       "location": "gone.py:f", "justification": "old"})
+    p = tmp_path / "baseline.json"
+    bl.save(str(p))
+    loaded = Baseline.load(str(p))
+    for f in findings:
+        loaded.is_suppressed(f)
+    audit = loaded.audit()
+    assert {f.rule for f in audit} == {"AN002", "AN003"}
+
+
+def test_baseline_version_mismatch(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"version": 99, "suppressions": []}))
+    with pytest.raises(ValueError):
+        Baseline.load(str(p))
+
+
+# -- CLI ----------------------------------------------------------------------
+
+def test_cli_exit_codes(tmp_path, capsys):
+    assert main([fixture("bad_jit_sync.py"), "--no-policy"]) == 1
+    assert main([fixture("bad_blockspec.py"), "--no-policy"]) == 1
+    assert main([fixture("clean.py"), "--no-policy"]) == 0
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "JL001" in out and "PK003" in out and "PT001" in out
+    assert main([os.path.join(FIX, "no_such_file.py")]) == 2
+
+
+def test_cli_fail_on_threshold():
+    # PK004 is a warning: gates by default, passes with --fail-on error
+    assert main([fixture("bad_vmem.py"), "--no-policy"]) == 1
+    assert main([fixture("bad_vmem.py"), "--no-policy",
+                 "--fail-on", "error"]) == 0
+
+
+def test_cli_select():
+    assert main([fixture("bad_jit_sync.py"), "--no-policy",
+                 "--select", "PK003"]) == 0
+    assert main([fixture("bad_jit_sync.py"), "--no-policy",
+                 "--select", "JL001"]) == 1
+
+
+def test_cli_json_output(capsys):
+    assert main([fixture("bad_hash_key.py"), "--no-policy",
+                 "--json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["failing"] == 1
+    (f,) = doc["findings"]
+    assert f["rule"] == "JL006"
+    assert f["severity"] == "error"
+    assert len(f["fingerprint"]) == 16
+
+
+def test_cli_write_then_baseline_suppresses(tmp_path, capsys):
+    bl = str(tmp_path / "bl.json")
+    assert main([fixture("bad_jit_sync.py"), "--no-policy",
+                 "--write-baseline", bl]) == 0
+    # unjustified entries themselves gate (AN002) — justify, then pass
+    with open(bl, encoding="utf-8") as f:
+        data = json.load(f)
+    for e in data["suppressions"]:
+        e["justification"] = "fixture: intentionally bad"
+    with open(bl, "w", encoding="utf-8") as f:
+        json.dump(data, f)
+    capsys.readouterr()
+    assert main([fixture("bad_jit_sync.py"), "--no-policy",
+                 "--baseline", bl]) == 0
+    assert "1 baselined" in capsys.readouterr().out
+
+
+def test_module_entrypoint_subprocess():
+    """`python -m repro.analysis` is the documented interface."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--no-policy",
+         fixture("bad_tracer_branch.py")],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=120)
+    assert proc.returncode == 1, proc.stderr
+    assert "JL005" in proc.stdout

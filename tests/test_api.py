@@ -11,11 +11,11 @@ import pytest
 
 from repro.api import DataSpec, Run, RunSpec
 from repro.configs import get_config
-from repro.core import (ESSProportional, PolicyRules, Rule, WTACRSConfig)
+from repro.core import ESSProportional, PolicyRules, Rule, WTACRSConfig
 from repro.core.config import EstimatorKind, NormSource
+from repro.launch import train_steps
 from repro.models import common as cm
 from repro.train import checkpoint, data, optim, znorm
-from repro.launch import train_steps
 
 KEY = jax.random.PRNGKey(0)
 ARCH = "qwen2.5-3b"

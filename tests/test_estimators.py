@@ -13,7 +13,7 @@ from repro.core import (approx_matmul, column_row_probabilities,
                         crs_plan, crs_variance, det_topk_plan,
                         empirical_estimator_stats, exact_matmul,
                         optimal_c_size, theorem2_condition, wtacrs_plan,
-                        wtacrs_variance_bound, apply_plan)
+                        wtacrs_variance_bound)
 from repro.core.config import EstimatorKind, WTACRSConfig
 
 
@@ -130,7 +130,6 @@ class TestPlans:
         order = np.argsort(-np.asarray(p))
         det_idx = order[:c]
         tail_idx = order[c:]
-        resid = 1.0 - float(jnp.sum(p[det_idx])) if c else 1.0
         contrib = lambda i: np.outer(np.asarray(x)[:, i],
                                      np.asarray(y)[i, :])
         det_part = sum((contrib(i) for i in det_idx),

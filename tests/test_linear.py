@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import (LoRAConfig, init_lora_params, lora_linear,
                         read_grad_norm_tap, wtacrs_linear)
-from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.core.config import WTACRSConfig
 
 
 @pytest.fixture(scope="module")

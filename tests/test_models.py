@@ -1,8 +1,6 @@
 """Per-architecture smoke tests (deliverable f): every assigned arch, in
 its REDUCED configuration, runs one forward/loss + one train step + one
 decode step on CPU with finite outputs and correct shapes."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,10 +8,10 @@ import pytest
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.launch import train_steps
 from repro.models import registry
 from repro.models.common import Policy
 from repro.train import optim
-from repro.launch import train_steps
 
 KEY = jax.random.PRNGKey(0)
 WTA = Policy(wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.5,

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (BudgetSchedule, EXACT_CONFIG, EstimatorKind,
+from repro.core import (EXACT_CONFIG, BudgetSchedule, EstimatorKind,
                         PolicyRules, Rule, WTACRSConfig,
                         empirical_estimator_stats, exact_matmul,
                         get_estimator, register_estimator,

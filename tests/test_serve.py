@@ -14,9 +14,8 @@ import numpy as np
 import pytest
 
 from repro.api import Run, RunSpec, ServeSpec
-from repro.serve import ServeSession, Status
+from repro.serve import ServeSession, Status, sampling
 from repro.serve.pool import PageAllocator
-from repro.serve import sampling
 
 
 @pytest.fixture(scope="module")

@@ -1,7 +1,6 @@
 """Sharding rules + HLO cost model + mesh construction."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -61,7 +60,6 @@ class TestSpecRules:
 
 class TestDecodeStateShardings:
     def test_batch_and_feature_dims(self):
-        mesh = FakeMesh()
         states = {"k": jax.ShapeDtypeStruct((40, 128, 32768, 8, 128),
                                             jnp.bfloat16)}
 
@@ -78,7 +76,6 @@ class TestDecodeStateShardings:
     def test_idle_data_axis_folds_into_sequence(self):
         """B=1 long-context decode: cache seq dim shards over all axes."""
         real = mesh_lib.make_host_mesh()
-        dsize = real.shape["data"]
         states = {"k": jax.ShapeDtypeStruct(
             (9, 1, 524288, 32, 80), jnp.bfloat16)}
         sh = shard_lib.decode_state_shardings(states, real, batch_size=1)

@@ -10,8 +10,6 @@
 4. Checkpoint/restart mid-training reproduces the uninterrupted run
    (fault-tolerance).
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -19,10 +17,10 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.launch import train_steps
 from repro.models import common as cm
 from repro.models import registry
 from repro.train import checkpoint, data, optim
-from repro.launch import train_steps
 
 KEY = jax.random.PRNGKey(0)
 

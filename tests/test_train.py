@@ -1,7 +1,5 @@
 """Training substrate: optimizer math, schedules, checkpoints, microbatch
 equivalence, gradient compression, the dataset znorm cache."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,10 +7,11 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.config import EstimatorKind, WTACRSConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import train_steps
 from repro.models import common as cm
 from repro.models import registry
 from repro.train import checkpoint, compression, data, optim, znorm
-from repro.launch import mesh as mesh_lib, train_steps
 
 KEY = jax.random.PRNGKey(0)
 
