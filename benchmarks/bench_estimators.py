@@ -139,8 +139,10 @@ def run():
     # runs through the Pallas interpreter, so the absolute number is a
     # correctness-path datapoint; on TPU it compiles natively and this
     # entry is the Table-3 overhead measurement at a realistic batch.
+    from repro.core.kernel_config import KernelConfig
     from repro.kernels import ops as kernel_ops
     from repro.kernels import ref as kernel_ref
+    kcfg = KernelConfig(backend="pallas")
     kb, kn, kdi, kdo, kk = common.smoke_or((2, 64, 64, 64, 17),
                                            (8, 256, 256, 256, 77))
     bkey = jax.random.PRNGKey(7)
@@ -148,7 +150,8 @@ def run():
     dzb = jax.random.normal(jax.random.fold_in(bkey, 1), (kb, kn, kdo))
     idxb = jax.random.randint(jax.random.fold_in(bkey, 2), (kb, kk), 0, kn)
     scaleb = jax.random.uniform(jax.random.fold_in(bkey, 3), (kb, kk))
-    t_ker = time_jit(kernel_ops.sampled_matmul, hs, dzb, idxb, scaleb)
+    t_ker = time_jit(lambda: kernel_ops.fused_sampled_dw(
+        hs, dzb, idxb, scaleb, kernel=kcfg))
     t_jnp = time_jit(jax.jit(kernel_ref.sampled_matmul_batched_ref),
                      hs, dzb, idxb, scaleb)
     emit(f"sampled_dw_kernel_vs_jnp@B{kb}", t_ker,

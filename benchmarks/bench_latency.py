@@ -41,13 +41,15 @@ def run():
              f"ratio_vs_exact={t / t_exact:.2f}")
 
     # Pallas kernels (interpret mode -- correctness path visibility only)
+    from repro.core.kernel_config import KernelConfig
     from repro.kernels import ops
+    kcfg = KernelConfig(backend="pallas", block_rows=128, block_d=128)
     n = common.smoke_or(128, 512)
     x = jax.random.normal(jax.random.fold_in(key, 2), (n, n),
                           jnp.float32)
-    t = time_jit(lambda: ops.row_norms(x, block_rows=128, block_d=128))
+    t = time_jit(lambda: ops.row_norms(x, kernel=kcfg))
     emit("kernel_row_norms_interp", t, "interpret-mode (not perf)")
     idx = jnp.arange(n // 4, dtype=jnp.int32)
     sc = jnp.ones((n // 4,), jnp.float32)
-    t = time_jit(lambda: ops.gather_scale(x, idx, sc, block_d=128))
+    t = time_jit(lambda: ops.gather_scale(x, idx, sc, kernel=kcfg))
     emit("kernel_gather_scale_interp", t, "interpret-mode (not perf)")

@@ -1,0 +1,99 @@
+"""Gate a fresh BENCH_kernels.json against the checked-in baseline.
+
+    python benchmarks/check_kernel_baseline.py \
+        bench-artifacts/BENCH_kernels.json \
+        benchmarks/baselines/BENCH_kernels.json
+
+Absolute timings vary with runner hardware, so the check is structural
+plus a ratio gate:
+
+* the artifact carries the baseline's full schema (bench shape, block
+  triple, fused/unfused/jnp measurements) with finite positive
+  timings — a refactor that silently drops a metric fails here;
+* the bench shape matches the baseline (same workload measured);
+* the acceptance floor holds: the fused kernel is >= 1.2x the unfused
+  gather_scale + sampled_matmul composition.  The advantage is
+  structural (one launch vs B+1, no materialized intermediate), so it
+  holds on ANY backend including the CPU interpreter;
+* no >10% speedup regression: ``speedup_fused_vs_unfused`` must stay
+  within 10% of the baseline's recorded speedup.  The jnp ratio is
+  interpreter-vs-XLA on CPU runners and is recorded but not gated.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+CONFIG_KEYS = ("b", "n", "d_in", "d_out", "k", "dtype", "backend")
+MEASURE_BLOCKS = ("fused", "unfused", "jnp")
+SPEEDUP_FLOOR = 1.2
+REGRESSION_TOLERANCE = 0.10      # >10% speedup drop vs baseline fails
+
+
+def check(artifact: dict, baseline: dict) -> list:
+    errors = []
+    for key in CONFIG_KEYS:
+        if key not in artifact:
+            errors.append(f"missing config key {key!r}")
+        elif artifact[key] != baseline[key]:
+            errors.append(f"config drift: {key} = {artifact[key]!r} but "
+                          f"baseline measured {baseline[key]!r}")
+    blocks = artifact.get("blocks")
+    if not (isinstance(blocks, dict)
+            and all(isinstance(blocks.get(x), int) and blocks.get(x) >= 1
+                    for x in ("bm", "bn", "bk"))):
+        errors.append(f"blocks = {blocks!r} (want bm/bn/bk ints >= 1)")
+    for name in MEASURE_BLOCKS:
+        block = artifact.get(name)
+        if not isinstance(block, dict):
+            errors.append(f"missing {name!r} measurements")
+            continue
+        us = block.get("us")
+        if not isinstance(us, (int, float)) or not math.isfinite(us) \
+                or us <= 0:
+            errors.append(f"{name}.us = {us!r} (want finite > 0)")
+    for key in ("speedup_fused_vs_unfused", "speedup_fused_vs_jnp"):
+        sp = artifact.get(key)
+        if not isinstance(sp, (int, float)) or not math.isfinite(sp) \
+                or sp <= 0:
+            errors.append(f"{key} = {sp!r} (want finite > 0)")
+    sp = artifact.get("speedup_fused_vs_unfused")
+    if isinstance(sp, (int, float)) and math.isfinite(sp):
+        if sp < SPEEDUP_FLOOR:
+            errors.append(
+                f"speedup_fused_vs_unfused = {sp:.3f}: the fused kernel "
+                f"must be >= {SPEEDUP_FLOOR}x the unfused composition")
+        base_sp = baseline.get("speedup_fused_vs_unfused")
+        if isinstance(base_sp, (int, float)) and math.isfinite(base_sp):
+            floor = (1.0 - REGRESSION_TOLERANCE) * base_sp
+            if sp < floor:
+                errors.append(
+                    f"speedup regression: {sp:.3f} is more than "
+                    f"{REGRESSION_TOLERANCE:.0%} below the baseline "
+                    f"speedup {base_sp:.3f} (floor {floor:.3f})")
+    return errors
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} <fresh BENCH_kernels.json> "
+                 f"<baseline json>")
+    with open(sys.argv[1]) as f:
+        artifact = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+    errors = check(artifact, baseline)
+    if errors:
+        for e in errors:
+            print(f"BASELINE CHECK FAILED: {e}", file=sys.stderr)
+        sys.exit(1)
+    sp = artifact["speedup_fused_vs_unfused"]
+    print(f"kernel baseline ok: fused x{sp:.2f} vs unfused composition "
+          f"(fused {artifact['fused']['us']:.0f} us, "
+          f"unfused {artifact['unfused']['us']:.0f} us, "
+          f"blocks {artifact['blocks']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,15 @@ kernels rely on:
   PK005  MXU matmul in a kernel body without
          ``preferred_element_type=jnp.float32`` — bf16 accumulation
          breaks the f32-accumulator contract of the estimator path
+  PK006  unpaired DMA semaphores: a kernel that builds ``pltpu``
+         async copies must both ``.start()`` and ``.wait()`` them — a
+         started-never-awaited copy races the compute reading its
+         destination; an awaited-never-started copy deadlocks
+  PK007  ``cdiv``-derived (ragged) grid without tail guards in the
+         kernel: the tail block reads out-of-bounds data, so the body
+         needs both a ``pl.when`` step guard and a ``where``/``select``
+         validity mask (a multiply-by-zero is NOT safe: 0 * garbage
+         can be NaN)
 
 Shape arithmetic is evaluated with the wrapper's parameter defaults;
 unknown dimensions (runtime shapes) assume 128 and the estimate is
@@ -42,6 +51,10 @@ PK004 = register_rule("PK004", WARNING,
                       "estimated VMEM footprint exceeds budget")
 PK005 = register_rule("PK005", ERROR,
                       "kernel matmul without f32 accumulation")
+PK006 = register_rule("PK006", ERROR,
+                      "unpaired DMA start/wait in kernel")
+PK007 = register_rule("PK007", ERROR,
+                      "cdiv (ragged) grid without kernel tail guards")
 
 DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024   # ~16 MB/core (TPU v4/v5)
 _ASSUMED_DIM = 128
@@ -358,6 +371,99 @@ def _check_kernel_matmuls(info: PallasCallInfo) -> List[Finding]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# PK006 — DMA semaphore pairing
+# ---------------------------------------------------------------------------
+
+def _method_call_leafs(fn: ast.FunctionDef) -> Dict[str, int]:
+    """Count attribute-call leaf names (``x.start()`` -> ``start``)."""
+    counts: Dict[str, int] = {}
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            leaf = node.func.attr
+            counts[leaf] = counts.get(leaf, 0) + 1
+    return counts
+
+
+def _check_dma_pairing(info: PallasCallInfo) -> List[Finding]:
+    if info.kernel is None:
+        return []
+    uses_dma = any(
+        isinstance(n, ast.Call)
+        and (astutil.call_name(n) or "").endswith("make_async_copy")
+        for n in ast.walk(info.kernel))
+    if not uses_dma:
+        return []
+    calls = _method_call_leafs(info.kernel)
+    starts, waits = calls.get("start", 0), calls.get("wait", 0)
+    if starts and waits:
+        return []
+    mod = info.mod
+    missing = "wait" if starts else "start"
+    present = "start" if starts else "wait"
+    return [Finding(
+        rule="PK006", path=mod.path, line=info.kernel.lineno,
+        col=info.kernel.col_offset + 1,
+        symbol=info.kernel.name,
+        message=f"kernel {info.kernel.name!r} builds pltpu async "
+                f"copies and calls .{present}() but never "
+                f".{missing}(): every DMA start needs a matching "
+                f"semaphore wait (unawaited copies race the compute "
+                f"reading their destination; unstarted waits "
+                f"deadlock)")]
+
+
+# ---------------------------------------------------------------------------
+# PK007 — ragged (cdiv) grids need in-kernel tail guards
+# ---------------------------------------------------------------------------
+
+def _grid_has_cdiv(info: PallasCallInfo) -> bool:
+    if not isinstance(info.grid, ast.Tuple):
+        return False
+    env = (astutil.assignments(info.wrapper)
+           if info.wrapper is not None else {})
+    for e in info.grid.elts:
+        expr = env.get(e.id, e) if isinstance(e, ast.Name) else e
+        for n in ast.walk(expr):
+            if (isinstance(n, ast.Call)
+                    and (astutil.call_name(n) or "").endswith("cdiv")):
+                return True
+    return False
+
+
+def _check_ragged_guards(info: PallasCallInfo) -> List[Finding]:
+    if info.kernel is None or not _grid_has_cdiv(info):
+        return []
+    has_when = False
+    has_mask = False
+    for n in ast.walk(info.kernel):
+        if not isinstance(n, ast.Call):
+            continue
+        leaf = (astutil.call_name(n) or "").rsplit(".", 1)[-1]
+        if leaf == "when":
+            has_when = True
+        if leaf in ("where", "select", "select_n"):
+            has_mask = True
+    if has_when and has_mask:
+        return []
+    mod = info.mod
+    lacking = []
+    if not has_when:
+        lacking.append("a pl.when step guard")
+    if not has_mask:
+        lacking.append("a where/select validity mask")
+    return [Finding(
+        rule="PK007", path=mod.path, line=info.call.lineno,
+        col=info.call.col_offset + 1, symbol=mod.symbol_for(info.call),
+        message=f"grid uses cdiv (ragged tail blocks) but kernel "
+                f"{info.kernel.name!r} lacks {' and '.join(lacking)}: "
+                f"tail blocks read out-of-bounds data, and masking by "
+                f"multiply is not enough (0 * garbage can be NaN) — "
+                f"select invalid slots to zero and guard tail-step "
+                f"effects with pl.when")]
+
+
 def check(modules: Iterable[astutil.Module],
           vmem_budget: Optional[int] = None) -> List[Finding]:
     if vmem_budget is None:
@@ -371,9 +477,11 @@ def check(modules: Iterable[astutil.Module],
             out.extend(_check_specs(info, grid_len))
             out.extend(_check_grid_divisibility(info))
             out.extend(_check_vmem(info, vmem_budget))
+            out.extend(_check_ragged_guards(info))
             if info.kernel is not None:
                 key = (mod.path, info.kernel.name)
                 if key not in seen_kernels:
                     seen_kernels.add(key)
                     out.extend(_check_kernel_matmuls(info))
+                    out.extend(_check_dma_pairing(info))
     return out

@@ -48,7 +48,10 @@ class Run:
     def __init__(self, spec: RunSpec):
         self.spec = spec
         self.cfg = get_config(spec.arch, reduced=spec.reduced)
-        self.policy = spec.policy
+        # One kernel-dispatch decision for the whole run: RunSpec.kernel
+        # maps over every config the policy can resolve to.
+        self.policy = (spec.policy if spec.kernel is None
+                       else spec.policy.with_kernel(spec.kernel))
         self.use_znorm_cache = spec.use_znorm_cache
         self.track_budget_stats = spec.track_budget_stats
         self.dataset = spec.data.build(self.cfg)

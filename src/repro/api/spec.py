@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.core.kernel_config import KernelConfig
 from repro.core.policy import PolicyRules  # noqa: F401  (re-export conv.)
 from repro.models import common as cm
 from repro.serve.spec import ServeSpec  # noqa: F401  (re-export conv.)
@@ -77,10 +78,18 @@ class RunSpec:
     (data, model) mesh over all local devices with ``model_parallel``
     model-axis size and shards state/steps by the arch's logical-axis
     rules.
+
+    ``kernel``: optional :class:`~repro.core.kernel_config.KernelConfig`
+    applied to EVERY estimator config the policy can resolve to
+    (``Policy.with_kernel``) before the run is assembled — one switch
+    for backend (``auto|pallas|jnp``), block overrides, and the
+    autotune tuning table.  ``None`` keeps whatever each config
+    already carries.
     """
 
     arch: str
     policy: cm.Policy = cm.Policy()
+    kernel: Optional[KernelConfig] = None
     reduced: bool = True
     seed: int = 0
 

@@ -51,16 +51,9 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.core import estimator_registry as registry
 from repro.core import plans
-from repro.core.config import NormSource, WTACRSConfig
+from repro.core.config import WTACRSConfig
 
 _EPS = 1e-30
-
-
-def _row_norms(x: jax.Array) -> jax.Array:
-    # f32-accumulating einsum: no materialized f32 copy of x
-    sq = jnp.einsum("...d,...d->...", x, x,
-                    preferred_element_type=jnp.float32)
-    return jnp.sqrt(sq)
 
 
 # ---------------------------------------------------------------------------
@@ -78,13 +71,12 @@ def _make_plans(h, znorm, key_data, cfg: WTACRSConfig, k: int):
 
     Dispatches to the registered plan builder for ``cfg.kind``.  The
     znorm term enters the probabilities only under CACHED_GRAD (the
-    config is authoritative; see NormSource).
+    config is authoritative; see NormSource).  The row-norm pass runs
+    through ``plans.batched_row_weights``, which shares ``cfg.kernel``
+    dispatch with the fused backward (Pallas row_norms kernel when the
+    config routes to Pallas).
     """
-    h_norms = _row_norms(h)                                   # (B, S)
-    if cfg.norm_source == NormSource.CACHED_GRAD:
-        weights = h_norms * znorm.astype(jnp.float32)
-    else:
-        weights = h_norms
+    weights = plans.batched_row_weights(h, znorm, cfg)        # (B, S)
     totals = jnp.sum(weights, axis=-1, keepdims=True)
     uniform = jnp.full_like(weights, 1.0 / weights.shape[-1])
     p = jnp.where(totals > 0, weights / jnp.maximum(totals, _EPS), uniform)
@@ -100,13 +92,14 @@ def _rowgather(x: jax.Array, idx: jax.Array) -> jax.Array:
 
 
 def _sampled_dw(h_sub, dz, idx, scale, cfg: WTACRSConfig, out_dtype):
-    """dW = sum_b H'_b^T @ (dZ_b[idx_b] * scale_b) — the batched Pallas
-    kernel when ``cfg.use_kernel`` (any B; the gather is fused into the
-    GEMM's k-loop so no gathered dZ' is ever materialized), else a
-    gather + batched dot_general."""
-    if cfg.use_kernel:
+    """dW = sum_b H'_b^T @ (dZ_b[idx_b] * scale_b) — the fused
+    ragged-native Pallas kernel when ``cfg.kernel`` routes to Pallas
+    (any B; one launch, dZ gathered straight from HBM, blocks from the
+    autotuner's tuning table), else a gather + batched dot_general."""
+    if cfg.kernel.use_pallas:
         from repro.kernels import ops as kernel_ops
-        dw = kernel_ops.sampled_matmul(h_sub, dz, idx, scale)
+        dw = kernel_ops.fused_sampled_dw(h_sub, dz, idx, scale,
+                                         kernel=cfg.kernel)
     else:
         dz_sub = _rowgather(dz, idx)                           # (B, k, E)
         # scale in f32, round once back to the compute dtype (same

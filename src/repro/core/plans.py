@@ -163,6 +163,34 @@ def _wtacrs_builder(p, k, key, cfg=None) -> SamplePlan:
     return wtacrs_plan(p, k, key, cap)
 
 
+def batched_row_weights(h: jax.Array, znorm: Optional[jax.Array],
+                        cfg) -> jax.Array:
+    """Unnormalized sampling weights over rows: h (B, S, D) -> (B, S).
+
+    The ||H_b,s|| factor of Eq. 3, times the cached gradient-norm term
+    when ``cfg.norm_source == CACHED_GRAD`` (the config is
+    authoritative — under ACTIVATION_ONLY a supplied znorm is ignored).
+    The row norms run through the Pallas reduction kernel whenever
+    ``cfg.kernel`` routes to Pallas, so the plan-building pass shares
+    the same dispatch the fused backward uses; the fallback is an
+    f32-accumulating einsum (no materialized f32 copy of h).
+    """
+    from repro.core.config import NormSource
+    kernel = getattr(cfg, "kernel", None)
+    if kernel is not None and kernel.use_pallas:
+        from repro.kernels import ops as kernel_ops
+        flat = h.reshape((-1, h.shape[-1]))
+        h_norms = kernel_ops.row_norms(flat, kernel=kernel)
+        h_norms = h_norms.reshape(h.shape[:-1])
+    else:
+        sq = jnp.einsum("...d,...d->...", h, h,
+                        preferred_element_type=jnp.float32)
+        h_norms = jnp.sqrt(sq)
+    if znorm is not None and cfg.norm_source == NormSource.CACHED_GRAD:
+        return h_norms * znorm.astype(jnp.float32)
+    return h_norms
+
+
 def build_batched_plans(p: jax.Array, k: int, key_data, cfg) -> SamplePlan:
     """Vmapped per-sample plan building: p (B, m) -> SamplePlan with
     (B, k) idx/scale leaves, one independent plan per batch element.

@@ -1,14 +1,26 @@
 """Pallas TPU kernels for the WTA-CRS hot spots.
 
-Kernels (each: <name>.py kernel body, ops.py jit'd wrapper, ref.py oracle):
-  * row_norms      -- per-row L2 norms feeding the column-row distribution
+Kernels (each: <name>.py kernel body, ops.py KernelConfig-dispatched
+wrapper, ref.py oracle):
+  * fused_sampling -- THE hot path: ragged-native fused gather+scale+
+                      GEMM backward dW = sum_b H'_b^T (dZ_b[idx_b]*
+                      scale_b) in one launch, dZ straight from HBM,
+                      blocks from the autotune tuning table
+  * sampled_matmul -- legacy even-tiling form of the same contraction
+                      (host-pads H'/dZ); retained as the fused path's
+                      parity/benchmark reference
+  * row_norms      -- per-row L2 norms feeding the column-row
+                      distribution (plans.batched_row_weights)
   * gather_scale   -- scalar-prefetched sub-sample gather (build H')
-  * sampled_matmul -- fused gather+scale+GEMM for the batched backward
-                      dW = sum_b H'_b^T (dZ_b[idx_b]*scale_b) (B is an
-                      outer grid dim; per-sample scalar-prefetched plans)
   * flash_attention -- fused online-softmax attention fwd (serving path;
                        p-blocks stay in VMEM -- the §Perf next-step fix)
-"""
-from repro.kernels import ops, ref
+  * autotune       -- (bm, bn, bk) block-size search + persisted JSON
+                      tuning table keyed on (d_in, d_out, B, k, dtype)
 
-__all__ = ["ops", "ref"]
+Dispatch policy lives in :class:`repro.core.kernel_config.KernelConfig`
+(backend auto|pallas|jnp, block overrides, tuning-table path) — one
+frozen record threaded from RunSpec/Policy down to every wrapper.
+"""
+from repro.kernels import autotune, ops, ref
+
+__all__ = ["autotune", "ops", "ref"]

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: the fused, ragged-native WTA-CRS sampled backward.
+
+Computes   dW = sum_b H'_b^T @ (dZ_b[idx_b] * scale_b)   in ONE kernel
+launch, consuming dZ and the (idx, scale) plan straight from HBM.
+
+This is the "fuse the sampling pipeline" rung of the ROADMAP.  The
+original ``sampled_matmul`` already fused the dZ gather into the GEMM's
+k-loop, but its even-tiling contract forced ``ops.py`` to ``jnp.pad``
+BOTH big operands (H' along k and d_in, dZ along d_out) before every
+launch — a full extra HBM round-trip per tensor, exactly the data
+movement the paper's Table 3 identifies as the estimator's overhead.
+This kernel is ragged-native instead:
+
+* dZ is never touched on the host: it stays in HBM
+  (``memory_space=ANY``) and rows are gathered by double-buffered
+  ``make_async_copy`` DMA driven by the scalar-prefetched index
+  vectors, same schedule as ``sampled_matmul``.
+* k need not tile evenly: the k-grid is ``ceil(k / bk)`` and the tail
+  block is handled IN-KERNEL — invalid slots are masked from H' with a
+  ``jnp.where`` on slot validity (a select, not a multiply, so
+  uninitialized out-of-bounds block contents can never poison the
+  accumulator via ``0 * inf``), and the host pads only the tiny
+  (B, k) idx/scale vectors (idx→0 keeps the tail DMAs in-bounds,
+  scale→0 zeroes their contribution).
+* d_in / d_out must still tile evenly by (bm, bn) — but the blocks are
+  chosen by ``kernels.autotune.resolve_blocks``, which only ever
+  returns exact divisors, so no padding happens there either.
+
+Grid: (d_in/bm, d_out/bn, B, ceil(k/bk)), batch and k innermost so the
+single f32 accumulator tile lives in VMEM across the whole
+sum-over-batch contraction (``pl.when``-guarded init at the first
+(b, s) step, output write at the last).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_sampled_dw_kernel(idx_ref, scale_ref, hsub_ref, dz_hbm, o_ref,
+                             dzbuf, sems, acc_ref, *, bk: int, bn: int,
+                             k: int, nb: int, nsteps: int):
+    j = pl.program_id(1)
+    b = pl.program_id(2)
+    s = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(b == 0, s == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Gather this (sample, k-block)'s rows of dZ (only the current
+    # n-slice) into VMEM.  Double-buffered: each row lands in its own
+    # dzbuf row, the two DMA semaphores alternate so row r+1's copy
+    # overlaps row r's wait.  Tail slots carry idx 0 (host-padded), so
+    # every DMA source is in-bounds; their scale is 0.
+    def _dma(r):
+        row = idx_ref[b, s * bk + r]
+        return pltpu.make_async_copy(
+            dz_hbm.at[b, row, pl.ds(j * bn, bn)], dzbuf.at[r],
+            sems.at[r % 2])
+
+    _dma(0).start()
+
+    def _fetch(r, _):
+        @pl.when(r + 1 < bk)
+        def _next():
+            _dma(r + 1).start()
+
+        _dma(r).wait()
+        return 0
+
+    jax.lax.fori_loop(0, bk, _fetch, 0, unroll=True)
+
+    scales = jax.lax.dynamic_slice(scale_ref[...], (b, s * bk),
+                                   (1, bk)).reshape(bk)
+    # Scale in f32, round ONCE back to the input dtype: feeds the MXU at
+    # its native (bf16) rate while matching the jnp fallback's rounding.
+    dzb = (dzbuf[...].astype(jnp.float32)
+           * scales[:, None]).astype(dzbuf.dtype)
+    # Ragged tail guard: slots at/past k read out-of-bounds H' block
+    # rows whose contents are unspecified — select them to zero (a
+    # where, NOT a multiply: 0 * garbage could be NaN).
+    valid = (s * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)) < k
+    hs = jnp.where(valid, hsub_ref[0], jnp.zeros_like(hsub_ref[0]))
+    # (bk, bm)^T @ (bk, bn) -> (bm, bn) on the MXU, f32 accumulation.
+    acc_ref[...] += jax.lax.dot_general(
+        hs, dzb, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(b == nb - 1, s == nsteps - 1))
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def fused_sampled_dw(hsub: jax.Array, dz: jax.Array, idx: jax.Array,
+                     scale: jax.Array, *, bm: int = 128, bn: int = 128,
+                     bk: int = 128, interpret: bool = False) -> jax.Array:
+    """dW (d_in, d_out) = sum_b hsub_b^T @ (dz_b[idx_b] * scale_b), f32.
+
+    hsub: (B, k, d_in), dz: (B, n, d_out), idx/scale: (B, ceil(k/bk)*bk)
+    — i.e. already padded to the k-grid (pad slots: idx 0, scale 0;
+    ops.py does this).  d_in/d_out must tile evenly by (bm, bn): the
+    autotuner only emits exact divisors, and a silent remainder would
+    drop columns from the reduction.  k is ragged-native.
+    """
+    nb, k, d_in = hsub.shape
+    d_out = dz.shape[2]
+    bm, bn, bk = min(bm, d_in), min(bn, d_out), min(bk, k)
+    if d_in % bm or d_out % bn:
+        raise ValueError(
+            f"fused_sampled_dw dims (d_in={d_in}, d_out={d_out}) must "
+            f"tile evenly by (bm={bm}, bn={bn}); the remainder would be "
+            f"silently dropped from the output — use "
+            f"autotune.resolve_blocks (ops.py does), which only returns "
+            f"divisors")
+    nsteps = pl.cdiv(k, bk)
+    if idx.shape != (nb, nsteps * bk) or scale.shape != (nb, nsteps * bk):
+        raise ValueError(
+            f"fused_sampled_dw wants idx/scale padded to the k-grid: "
+            f"expected ({nb}, {nsteps * bk}), got {idx.shape} / "
+            f"{scale.shape} (pad slots: idx 0, scale 0; ops.py does)")
+    grid = (d_in // bm, d_out // bn, nb, nsteps)
+    return pl.pallas_call(
+        functools.partial(_fused_sampled_dw_kernel, bk=bk, bn=bn, k=k,
+                          nb=nb, nsteps=nsteps),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bk, bm), lambda i, j, b, s, *_: (b, s, i)),
+                pl.BlockSpec(memory_space=pl.ANY),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, b, s, *_: (i, j)),
+            scratch_shapes=[
+                pltpu.VMEM((bk, bn), dz.dtype),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.VMEM((bm, bn), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((d_in, d_out), jnp.float32),
+        interpret=interpret,
+    )(idx, scale, hsub, dz)

@@ -1,11 +1,28 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels, dispatched by KernelConfig.
 
-Handles:
-  * padding to block multiples (zero rows contribute nothing to norms or
-    GEMMs; padded index slots point at row 0 with scale 0),
-  * interpret-mode selection: on CPU backends the kernels execute via the
-    Pallas interpreter (correctness path); on TPU they compile natively,
-  * dtype policy: accumulation in f32 regardless of input dtype.
+Every sampling-pipeline entry point takes one optional ``kernel=``
+argument — a frozen :class:`repro.core.kernel_config.KernelConfig` —
+instead of the old scatter of per-call ``bm``/``bn``/``bk``/
+``block_rows``/``block_d``/``interpret`` keywords.  The config decides
+
+  * the backend: ``use_pallas`` routes to the Pallas kernels (with
+    ``interpret`` resolved ONCE at config construction, never
+    re-queried inside these jit-traced bodies), anything else to the
+    pure-jnp oracles in :mod:`repro.kernels.ref`;
+  * the blocks: explicit config overrides beat the persisted tuning
+    table (``repro.kernels.autotune``) beat shape-derived defaults.
+
+``kernel=None`` means ``DEFAULT_KERNEL_CONFIG`` (backend ``auto``:
+Pallas exactly when compiling natively, jnp on interpret-mode/CPU
+backends).  Tests and CI pass ``PALLAS_INTERPRET_CONFIG`` to force the
+kernels through the interpreter.
+
+Padding policy: the legacy composition (``row_norms`` /
+``gather_scale`` / ``sampled_matmul``) pads operands to block
+multiples on the host (zero rows contribute nothing; padded index
+slots point at row 0 with scale 0).  The fused path
+(:func:`fused_sampled_dw`) is ragged-native — only the tiny (B, k)
+idx/scale vectors are ever padded; H' and dZ go to the kernel as-is.
 """
 from __future__ import annotations
 
@@ -14,13 +31,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.kernel_config import DEFAULT_KERNEL_CONFIG, KernelConfig
+from repro.kernels import autotune as _autotune
+from repro.kernels import fused_sampling as _fused
 from repro.kernels import gather_scale as _gather
+from repro.kernels import ref as _ref
 from repro.kernels import row_norms as _norms
 from repro.kernels import sampled_matmul as _smm
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _resolve(kernel: KernelConfig | None) -> KernelConfig:
+    return DEFAULT_KERNEL_CONFIG if kernel is None else kernel
 
 
 def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
@@ -39,79 +60,132 @@ def _pad_cols(x: jax.Array, mult: int) -> jax.Array:
     return jnp.pad(x, ((0, 0), (0, pad)))
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "block_d",
-                                             "interpret"))
-def row_norms(x: jax.Array, *, block_rows: int = 256, block_d: int = 512,
-              interpret: bool | None = None) -> jax.Array:
-    """Per-row L2 norms (f32) of (n, d) via the Pallas reduction kernel."""
-    if interpret is None:
-        interpret = _on_cpu()
-    n = x.shape[0]
-    block_rows = min(block_rows, n)
-    block_d = min(block_d, x.shape[1])
+def _pad_plan(idx: jax.Array, scale: jax.Array,
+              k_padded: int) -> tuple[jax.Array, jax.Array]:
+    """Pad (B, k) plan vectors to k_padded slots: idx 0 (in-bounds DMA
+    target), scale 0 (contributes nothing)."""
+    b, k = idx.shape
+    pad = k_padded - k
+    idxp = idx.astype(jnp.int32)
+    scalep = scale.astype(jnp.float32)
+    if pad:
+        idxp = jnp.concatenate(
+            [idxp, jnp.zeros((b, pad), jnp.int32)], axis=1)
+        scalep = jnp.concatenate(
+            [scalep, jnp.zeros((b, pad), jnp.float32)], axis=1)
+    return idxp, scalep
+
+
+@functools.partial(jax.jit, static_argnames=("kernel",))
+def row_norms(x: jax.Array, *,
+              kernel: KernelConfig | None = None) -> jax.Array:
+    """Per-row L2 norms (f32) of (n, d)."""
+    cfg = _resolve(kernel)
+    if not cfg.use_pallas:
+        return _ref.row_norms_ref(x)
+    n, d = x.shape
+    block_rows = min(cfg.block_rows or 256, n)
+    block_d = min(cfg.block_d or 512, d)
     xp = _pad_cols(_pad_rows(x, block_rows), block_d)
     out = _norms.row_norms(xp, block_rows=block_rows, block_d=block_d,
-                           interpret=interpret)
+                           interpret=cfg.interpret)
     return out[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+@functools.partial(jax.jit, static_argnames=("kernel",))
 def gather_scale(x: jax.Array, idx: jax.Array, scale: jax.Array, *,
-                 block_d: int = 512,
-                 interpret: bool | None = None) -> jax.Array:
+                 kernel: KernelConfig | None = None) -> jax.Array:
     """(k, d) = x[idx] * scale[:, None] via scalar-prefetch gather."""
-    if interpret is None:
-        interpret = _on_cpu()
-    block_d = min(block_d, x.shape[1])
+    cfg = _resolve(kernel)
+    if not cfg.use_pallas:
+        return _ref.gather_scale_ref(x, idx, scale)
+    block_d = min(cfg.block_d or 512, x.shape[1])
     xp = _pad_cols(x, block_d)
     out = _gather.gather_scale(xp, idx.astype(jnp.int32),
                                scale.astype(jnp.float32),
-                               block_d=block_d, interpret=interpret)
+                               block_d=block_d, interpret=cfg.interpret)
     return out[:, :x.shape[1]]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def sampled_matmul(hsub: jax.Array, dz: jax.Array, idx: jax.Array,
-                   scale: jax.Array, *, bm: int = 128, bn: int = 128,
-                   bk: int = 128, interpret: bool | None = None) -> jax.Array:
-    """dW = sum_b hsub_b^T @ (dz_b[idx_b] * scale_b), gather fused into
-    the GEMM's k-loop.
-
-    Batched form: hsub (B, k, d_in), dz (B, n, d_out), idx/scale (B, k).
-    2-D operands (the single-sample case) are accepted and treated as
-    B == 1.  Returns (d_in, d_out) f32 — the batch-summed dW.
-    """
-    if interpret is None:
-        interpret = _on_cpu()
+def _as_batched(hsub, dz, idx, scale):
     if hsub.ndim == 2:
-        hsub, dz = hsub[None], dz[None]
-        idx, scale = idx[None], scale[None]
+        return hsub[None], dz[None], idx[None], scale[None]
+    return hsub, dz, idx, scale
+
+
+@functools.partial(jax.jit, static_argnames=("kernel",))
+def sampled_matmul(hsub: jax.Array, dz: jax.Array, idx: jax.Array,
+                   scale: jax.Array, *,
+                   kernel: KernelConfig | None = None) -> jax.Array:
+    """dW = sum_b hsub_b^T @ (dz_b[idx_b] * scale_b) — the LEGACY
+    even-tiling kernel (host-pads H' and dZ to block multiples).
+
+    Retained as the parity/benchmark reference for
+    :func:`fused_sampled_dw`, which does the same contraction without
+    the big-operand padding.  Batched form: hsub (B, k, d_in), dz
+    (B, n, d_out), idx/scale (B, k); 2-D operands = B == 1.  Returns
+    (d_in, d_out) f32.
+    """
+    cfg = _resolve(kernel)
+    hsub, dz, idx, scale = _as_batched(hsub, dz, idx, scale)
     b, k, d_in = hsub.shape
     d_out = dz.shape[2]
-    bm, bn, bk = min(bm, d_in), min(bn, d_out), min(bk, k)
+    if not cfg.use_pallas:
+        return _ref.sampled_matmul_batched_ref(
+            hsub, dz, idx.astype(jnp.int32), scale)
+    bm, bn, bk = _autotune.resolve_blocks(cfg, d_in, d_out, b, k,
+                                          hsub.dtype)
     hp = jax.vmap(lambda h: _pad_cols(_pad_rows(h, bk), bm))(hsub)
-    dzp = jax.vmap(lambda z: _pad_cols(z, bn))(dz)
-    pad_k = (-k) % bk
-    idxp = jnp.concatenate(
-        [idx.astype(jnp.int32), jnp.zeros((b, pad_k), jnp.int32)], axis=1)
-    scalep = jnp.concatenate(
-        [scale.astype(jnp.float32), jnp.zeros((b, pad_k), jnp.float32)],
-        axis=1)
+    dzp = jax.vmap(_pad_cols, in_axes=(0, None))(dz, bn)
+    idxp, scalep = _pad_plan(idx, scale, hp.shape[1])
     out = _smm.sampled_matmul(hp, dzp, idxp, scalep, bm=bm, bn=bn, bk=bk,
-                              interpret=interpret)
+                              interpret=cfg.interpret)
     return out[:d_in, :d_out]
 
 
+@functools.partial(jax.jit, static_argnames=("kernel",))
+def fused_sampled_dw(hsub: jax.Array, dz: jax.Array, idx: jax.Array,
+                     scale: jax.Array, *,
+                     kernel: KernelConfig | None = None) -> jax.Array:
+    """dW = sum_b hsub_b^T @ (dz_b[idx_b] * scale_b) via the fused
+    ragged-native kernel (one launch; dZ read straight from HBM).
+
+    Same contract as :func:`sampled_matmul`; this is the hot path
+    ``core.linear`` dispatches to.  Blocks come from the autotuner's
+    tuning table keyed on (d_in, d_out, B, k, dtype) unless the config
+    pins them.  Falls back to the jnp oracle when the config says so
+    (backend ``jnp``, or ``auto`` on an interpret-mode backend).
+    """
+    cfg = _resolve(kernel)
+    hsub, dz, idx, scale = _as_batched(hsub, dz, idx, scale)
+    b, k, d_in = hsub.shape
+    d_out = dz.shape[2]
+    if not cfg.use_pallas:
+        return _ref.sampled_matmul_batched_ref(
+            hsub, dz, idx.astype(jnp.int32), scale)
+    bm, bn, bk = _autotune.resolve_blocks(cfg, d_in, d_out, b, k,
+                                          hsub.dtype)
+    nsteps = -(-k // bk)
+    idxp, scalep = _pad_plan(idx, scale, nsteps * bk)
+    return _fused.fused_sampled_dw(hsub, dz, idxp, scalep, bm=bm, bn=bn,
+                                   bk=bk, interpret=cfg.interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("group", "causal", "bq", "bk",
-                                             "interpret"))
+                                             "kernel"))
 def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         group: int = 1, causal: bool = True,
                         bq: int = 128, bk: int = 128,
-                        interpret: bool | None = None) -> jax.Array:
+                        kernel: KernelConfig | None = None) -> jax.Array:
     """Fused flash attention forward (serving path); see
-    kernels/flash_attention.py.  q: (BH, Sq, Dh), k/v: (BKVH, Skv, Dh)."""
+    kernels/flash_attention.py.  q: (BH, Sq, Dh), k/v: (BKVH, Skv, Dh).
+
+    Always runs the Pallas kernel (there is no sampling to skip);
+    ``kernel`` only supplies the construction-time ``interpret``
+    resolution.  bq/bk stay explicit: flash tiling is seq-length
+    geometry, not part of the sampled-GEMM tuning table.
+    """
     from repro.kernels import flash_attention as _fl
-    if interpret is None:
-        interpret = _on_cpu()
+    cfg = _resolve(kernel)
     return _fl.flash_attention_fwd(q, k, v, group=group, causal=causal,
-                                   bq=bq, bk=bk, interpret=interpret)
+                                   bq=bq, bk=bk, interpret=cfg.interpret)

@@ -211,6 +211,27 @@ class Policy:
         budgets = None if budgets is None else tuple(budgets)
         return dataclasses.replace(self, rule_budgets=budgets)
 
+    def with_kernel(self, kernel) -> "Policy":
+        """Apply one :class:`~repro.core.kernel_config.KernelConfig` to
+        every estimator config this policy can resolve to: the default
+        ``wtacrs``, the rules' ``default``, and each rule's explicit
+        config.  Per-rule ``kernel=``/``use_kernel=`` overrides are
+        left alone — an explicit rule-level choice stays authoritative.
+        This is how ``RunSpec.kernel`` threads one kernel-dispatch
+        decision through the whole policy."""
+        wtacrs = self.wtacrs.with_kernel(kernel)
+        rules = self.rules
+        if rules is not None:
+            new_rules = tuple(
+                r if r.config is None
+                else dataclasses.replace(r, config=r.config.with_kernel(kernel))
+                for r in rules.rules)
+            default = (None if rules.default is None
+                       else rules.default.with_kernel(kernel))
+            rules = dataclasses.replace(rules, rules=new_rules,
+                                        default=default)
+        return dataclasses.replace(self, wtacrs=wtacrs, rules=rules)
+
     def schedule_signature(self) -> Tuple[float, ...]:
         """Jit-cache key: changes exactly when a schedule crosses a
         plateau boundary or a controller decision re-pins a budget

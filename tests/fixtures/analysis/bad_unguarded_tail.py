@@ -1,0 +1,24 @@
+"""Fixture: ragged cdiv grid without in-kernel tail guards (PK007)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sum_kernel(x_ref, o_ref):
+    # PK007: tail d-block reads out-of-bounds columns, but nothing
+    # masks them (no pl.when, no where/select) — garbage enters the sum.
+    o_ref[...] = jnp.sum(x_ref[...], axis=1)
+
+
+def ragged_sum(x, block=128):
+    n, d = x.shape
+    if n % block:
+        raise ValueError("rows must tile evenly")
+    grid = (n // block, pl.cdiv(d, block))
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+    )(x)

@@ -1,0 +1,27 @@
+"""Fixture: DMA copy started but never awaited (PK006)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dma_kernel(idx_ref, x_hbm, o_ref, buf, sem):
+    t = pl.program_id(0)
+    cp = pltpu.make_async_copy(x_hbm.at[idx_ref[t]], buf.at[0], sem)
+    cp.start()  # PK006: no .wait() — compute races the in-flight DMA
+    o_ref[...] = buf[0]
+
+
+def unpaired_dma(x, idx):
+    return pl.pallas_call(
+        _dma_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(8,),
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec((1, 128), lambda t, idx_ref: (t, 0)),
+            scratch_shapes=[pltpu.VMEM((1, 128), jnp.float32),
+                            pltpu.SemaphoreType.DMA],
+        ),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(idx, x)

@@ -50,6 +50,8 @@ def run_fixture(name, **kw):
     ("bad_blockspec.py", "PK003"),
     ("bad_vmem.py", "PK004"),
     ("bad_bf16_matmul.py", "PK005"),
+    ("bad_unpaired_dma.py", "PK006"),
+    ("bad_unguarded_tail.py", "PK007"),
     ("bad_policy.py", "PT001"),
     ("bad_policy_cached_rows.py", "PT003"),
     ("bad_policy_shadowed.py", "PT004"),

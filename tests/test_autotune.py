@@ -1,0 +1,209 @@
+"""Autotuner determinism, tuning-table round-trip, and fallbacks."""
+import json
+import os
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernel_config import KernelConfig
+from repro.kernels import autotune as at
+from repro.kernels import ops, ref
+
+
+def fake_measure(best):
+    """Deterministic injected measure: `best` wins, ties elsewhere."""
+    def measure(blocks, d_in, d_out, b, k, dtype):
+        return 1.0 if tuple(blocks) == tuple(best) else 2.0
+    return measure
+
+
+# -- determinism --------------------------------------------------------------
+
+def test_candidate_order_is_deterministic():
+    a = at.candidate_blocks(256, 192, 77)
+    b = at.candidate_blocks(256, 192, 77)
+    assert a == b and len(a) == len(set(a))
+    # every candidate honors the divisibility contract
+    for bm, bn, bk in a:
+        assert 256 % bm == 0 and 192 % bn == 0 and bk <= 77
+
+
+def test_autotune_same_key_same_blocks():
+    """ACCEPTANCE: same (shape, dtype) key -> same chosen blocks."""
+    runs = [at.autotune(64, 64, 2, 24, "float32",
+                        measure=fake_measure((32, 16, 8)))
+            for _ in range(3)]
+    assert all(r == runs[0] for r in runs)
+    assert runs[0][0] == (32, 16, 8)
+
+
+def test_autotune_tie_breaks_to_first_candidate():
+    def flat(blocks, *shape):
+        return 1.0
+    best, _ = at.autotune(64, 64, 2, 24, "float32", measure=flat)
+    assert best == at.candidate_blocks(64, 64, 24)[0]
+
+
+def test_shape_key_stable():
+    assert (at.shape_key(256, 128, 8, 77, jnp.float32)
+            == "di256-do128-b8-k77-float32")
+    assert (at.shape_key(256, 128, 8, 77, "bfloat16")
+            == at.shape_key(256, 128, 8, 77, jnp.bfloat16))
+
+
+# -- table round-trip ---------------------------------------------------------
+
+def test_table_roundtrip(tmp_path):
+    t = at.TuningTable()
+    key = at.shape_key(256, 256, 8, 77, "float32")
+    t.put(key, (64, 128, 32), 12.5)
+    p = str(tmp_path / "table.json")
+    t.save(p)
+    t2 = at.TuningTable.load(p)
+    assert t2.entries == {key: (64, 128, 32)}
+    assert t2.timings_us[key] == 12.5
+    # resolve_blocks picks the table entry up through table_path
+    cfg = KernelConfig(table_path=p)
+    assert at.resolve_blocks(cfg, 256, 256, 8, 77,
+                             jnp.float32) == (64, 128, 32)
+
+
+def test_refresh_table_merges_and_persists(tmp_path):
+    p = str(tmp_path / "table.json")
+    shapes = [(64, 64, 2, 24, "float32")]
+    at.refresh_table(shapes, p, measure=fake_measure((16, 16, 8)))
+    t = at.TuningTable.load(p)
+    assert t.lookup(at.shape_key(64, 64, 2, 24, "float32")) == (16, 16, 8)
+    # merge keeps the old entry while adding a new shape
+    at.refresh_table([(128, 64, 2, 24, "float32")], p,
+                     measure=fake_measure((32, 32, 8)), base=t)
+    t2 = at.TuningTable.load(p)
+    assert t2.lookup(at.shape_key(64, 64, 2, 24, "float32")) == (16, 16, 8)
+    assert t2.lookup(at.shape_key(128, 64, 2, 24, "float32")) == (32, 32, 8)
+
+
+def test_packaged_table_is_valid():
+    t = at.TuningTable.load(at.PACKAGED_TABLE)
+    assert t.entries, "packaged tuning table is missing or empty"
+    with open(at.PACKAGED_TABLE) as f:
+        raw = json.load(f)
+    assert raw["version"] == at.TABLE_VERSION
+
+
+# -- corrupt / missing fallback ----------------------------------------------
+
+def test_missing_table_falls_back_to_defaults(tmp_path):
+    cfg = KernelConfig(table_path=str(tmp_path / "nope.json"))
+    assert (at.resolve_blocks(cfg, 256, 256, 8, 77, jnp.float32)
+            == at.default_blocks(256, 256, 77))
+
+
+def test_corrupt_table_warns_once_and_falls_back(tmp_path):
+    p = str(tmp_path / "corrupt.json")
+    with open(p, "w") as f:
+        f.write("{not json")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = KernelConfig(table_path=p)
+        blocks = at.resolve_blocks(cfg, 64, 64, 2, 24, jnp.float32)
+        # second resolve hits the lru_cache: no second warning
+        at.resolve_blocks(cfg, 64, 64, 2, 24, jnp.float32)
+    assert blocks == at.default_blocks(64, 64, 24)
+    corrupt = [x for x in w if "corrupt" in str(x.message)]
+    assert len(corrupt) == 1
+
+
+def test_version_mismatch_is_corrupt(tmp_path):
+    p = str(tmp_path / "old.json")
+    with open(p, "w") as f:
+        json.dump({"version": 99, "entries": {}}, f)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        t = at.TuningTable.load(p)
+    assert t.entries == {} and len(w) == 1
+
+
+# -- resolution priority ------------------------------------------------------
+
+def test_explicit_overrides_beat_table(tmp_path):
+    p = str(tmp_path / "table.json")
+    t = at.TuningTable()
+    t.put(at.shape_key(256, 256, 8, 77, "float32"), (64, 64, 16))
+    t.save(p)
+    cfg = KernelConfig(table_path=p, bm=32)
+    assert at.resolve_blocks(cfg, 256, 256, 8, 77,
+                             jnp.float32) == (32, 64, 16)
+
+
+def test_resolution_clamps_to_divisors():
+    cfg = KernelConfig(bm=100, bn=100, bk=1000, autotune=False)
+    bm, bn, bk = at.resolve_blocks(cfg, 96, 130, 4, 20, jnp.float32)
+    assert 96 % bm == 0 and 130 % bn == 0 and bk <= 20
+    assert (bm, bn, bk) == (96, 65, 20)
+
+
+def test_autotune_off_ignores_table(tmp_path):
+    p = str(tmp_path / "table.json")
+    t = at.TuningTable()
+    t.put(at.shape_key(256, 256, 8, 77, "float32"), (64, 64, 16))
+    t.save(p)
+    cfg = KernelConfig(table_path=p, autotune=False)
+    assert (at.resolve_blocks(cfg, 256, 256, 8, 77, jnp.float32)
+            == at.default_blocks(256, 256, 77))
+
+
+# -- end-to-end: tuned blocks drive the kernel --------------------------------
+
+@pytest.mark.kernel
+def test_table_blocks_reach_fused_kernel(tmp_path):
+    """A tuning-table entry changes the dispatch blocks AND the result
+    still matches the oracle (ragged bk from the table)."""
+    rng = np.random.RandomState(4)
+    b, k, di, do, n = 2, 10, 32, 24, 30
+    p = str(tmp_path / "table.json")
+    t = at.TuningTable()
+    t.put(at.shape_key(di, do, b, k, "float32"), (16, 8, 4))
+    t.save(p)
+    cfg = KernelConfig(backend="pallas", table_path=p)
+    hs = jnp.asarray(rng.randn(b, k, di), jnp.float32)
+    dz = jnp.asarray(rng.randn(b, n, do), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, n, (b, k)), jnp.int32)
+    scale = jnp.asarray(rng.rand(b, k), jnp.float32)
+    got = ops.fused_sampled_dw(hs, dz, idx, scale, kernel=cfg)
+    want = ref.sampled_matmul_batched_ref(hs, dz, idx, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cli_refresh_writes_table(tmp_path, capsys, monkeypatch):
+    """The nightly entry point: shapes parse, table lands on disk.
+    The winner sits inside the CLI's default largest-block candidate
+    prefix (--max-candidates 8)."""
+    out = str(tmp_path / "nightly.json")
+    monkeypatch.setattr(at, "_default_measure",
+                        lambda interpret: fake_measure((64, 32, 16)))
+    rc = at.main(["--out", out, "--shapes", "64,64,2,24,float32"])
+    assert rc == 0
+    assert os.path.exists(out)
+    t = at.TuningTable.load(out)
+    assert t.lookup(at.shape_key(64, 64, 2, 24, "float32")) == (64, 32, 16)
+    assert "wrote 1 entries" in capsys.readouterr().out
+
+
+def test_cli_max_candidates_caps_search(tmp_path, monkeypatch, capsys):
+    """A winner beyond the cap is never measured: the first candidate
+    (all ties) wins instead; --max-candidates 0 restores the ladder."""
+    out = str(tmp_path / "capped.json")
+    monkeypatch.setattr(at, "_default_measure",
+                        lambda interpret: fake_measure((16, 16, 8)))
+    assert at.main(["--out", out, "--shapes", "64,64,2,24,float32"]) == 0
+    t = at.TuningTable.load(out)
+    assert (t.lookup(at.shape_key(64, 64, 2, 24, "float32"))
+            == at.candidate_blocks(64, 64, 24)[0])
+    assert at.main(["--out", out, "--shapes", "64,64,2,24,float32",
+                    "--max-candidates", "0"]) == 0
+    t = at.TuningTable.load(out)
+    assert t.lookup(at.shape_key(64, 64, 2, 24, "float32")) == (16, 16, 8)
+    capsys.readouterr()

@@ -1,4 +1,11 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
+
+All kernel dispatch goes through ``KernelConfig`` (backend pallas =
+interpret mode on CPU).  Block sizes are pinned via config overrides so
+the sweeps exercise ragged/tiny blocks regardless of the tuning table.
+"""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,9 +16,15 @@ try:
 except ImportError:   # degrade: property tests skip, example tests run
     from conftest import given, settings, st  # noqa: F401
 
+from repro.core.kernel_config import KernelConfig
 from repro.kernels import ops, ref
 
 RNG = np.random.RandomState(0)
+
+
+def icfg(**blocks):
+    """Interpret-mode Pallas config with pinned blocks (no table)."""
+    return KernelConfig(backend="pallas", autotune=False, **blocks)
 
 
 def _tol(dtype):
@@ -24,10 +37,17 @@ def _tol(dtype):
                                  (256, 512), (8, 8)])
 def test_row_norms(n, d, dtype):
     x = jnp.asarray(RNG.randn(n, d), dtype)
-    got = ops.row_norms(x, block_rows=32, block_d=64)
+    got = ops.row_norms(x, kernel=icfg(block_rows=32, block_d=64))
     want = ref.row_norms_ref(x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                **_tol(dtype))
+
+
+def test_row_norms_jnp_backend():
+    x = jnp.asarray(RNG.randn(40, 24), jnp.float32)
+    got = ops.row_norms(x, kernel=KernelConfig(backend="jnp"))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.row_norms_ref(x)), rtol=1e-6)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -37,7 +57,7 @@ def test_gather_scale(n, d, k, dtype):
     x = jnp.asarray(RNG.randn(n, d), dtype)
     idx = jnp.asarray(RNG.randint(0, n, (k,)), jnp.int32)
     scale = jnp.asarray(RNG.rand(k), jnp.float32)
-    got = ops.gather_scale(x, idx, scale, block_d=64)
+    got = ops.gather_scale(x, idx, scale, kernel=icfg(block_d=64))
     want = ref.gather_scale_ref(x, idx, scale)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **_tol(dtype))
@@ -51,7 +71,8 @@ def test_sampled_matmul(k, di, do, n, dtype):
     dz = jnp.asarray(RNG.randn(n, do), dtype)
     idx = jnp.asarray(RNG.randint(0, n, (k,)), jnp.int32)
     scale = jnp.asarray(RNG.rand(k), jnp.float32)
-    got = ops.sampled_matmul(hs, dz, idx, scale, bm=16, bn=16, bk=8)
+    got = ops.sampled_matmul(hs, dz, idx, scale,
+                             kernel=icfg(bm=16, bn=16, bk=8))
     want = ref.sampled_matmul_ref(hs, dz, idx, scale)
     tol = dict(rtol=3e-2, atol=3e-1) if dtype == jnp.bfloat16 \
         else dict(rtol=1e-4, atol=1e-4)
@@ -66,7 +87,7 @@ def test_gather_scale_property(n, d, k, seed):
     x = jnp.asarray(rng.randn(n, d), jnp.float32)
     idx = jnp.asarray(rng.randint(0, n, (k,)), jnp.int32)
     scale = jnp.asarray(rng.rand(k), jnp.float32)
-    got = ops.gather_scale(x, idx, scale, block_d=32)
+    got = ops.gather_scale(x, idx, scale, kernel=icfg(block_d=32))
     want = ref.gather_scale_ref(x, idx, scale)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-6)
@@ -75,13 +96,14 @@ def test_gather_scale_property(n, d, k, seed):
 @settings(max_examples=10, deadline=None)
 @given(k=st.integers(1, 32), di=st.integers(4, 64), do=st.integers(4, 48),
        n=st.integers(4, 64), seed=st.integers(0, 10_000))
-def test_sampled_matmul_property(k, di, do, n, seed):
+def test_fused_sampled_dw_property(k, di, do, n, seed):
     rng = np.random.RandomState(seed)
     hs = jnp.asarray(rng.randn(k, di), jnp.float32)
     dz = jnp.asarray(rng.randn(n, do), jnp.float32)
     idx = jnp.asarray(rng.randint(0, n, (k,)), jnp.int32)
     scale = jnp.asarray(rng.rand(k), jnp.float32)
-    got = ops.sampled_matmul(hs, dz, idx, scale, bm=16, bn=16, bk=8)
+    got = ops.fused_sampled_dw(hs, dz, idx, scale,
+                               kernel=icfg(bm=16, bn=16, bk=8))
     want = ref.sampled_matmul_ref(hs, dz, idx, scale)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
@@ -94,39 +116,103 @@ def test_sampled_matmul_property(k, di, do, n, seed):
     (2, 20, 130, 70, 50),       # ragged last block in every dim
     (8, 12, 33, 17, 30),        # larger batch, ragged + tiny dims
 ])
+def test_fused_matches_unfused_composition(b, k, di, do, n, dtype):
+    """ACCEPTANCE: the fused kernel bit-matches (within f32-accumulation
+    tolerance) the unfused row_norms -> plan -> gather_scale ->
+    sampled_matmul composition, across B x dtype x ragged shapes."""
+    from repro.core import plans as plans_lib
+
+    cfg = icfg(bm=16, bn=16, bk=8, block_rows=16, block_d=32)
+    h = jnp.asarray(RNG.randn(b, n, di), dtype)
+    dz = jnp.asarray(RNG.randn(b, n, do), dtype)
+
+    # Unfused pipeline, per sample: kernel row-norms feed the plan, the
+    # kernel gather builds H', the legacy padded kernel does the GEMM.
+    idxs, scales, hsubs = [], [], []
+    for i in range(b):
+        norms = ops.row_norms(h[i], kernel=cfg)
+        p = norms / jnp.sum(norms)
+        plan = plans_lib.wtacrs_plan(p, k, jax.random.PRNGKey(i))
+        idxs.append(plan.idx)
+        scales.append(plan.scale)
+        hsubs.append(ops.gather_scale(h[i], plan.idx,
+                                      jnp.ones((k,), jnp.float32),
+                                      kernel=cfg))
+    idx = jnp.stack(idxs)
+    scale = jnp.stack(scales)
+    hsub = jnp.stack(hsubs)
+    unfused = ops.sampled_matmul(hsub, dz, idx, scale, kernel=cfg)
+
+    fused = ops.fused_sampled_dw(hsub, dz, idx, scale, kernel=cfg)
+    oracle = ref.sampled_matmul_batched_ref(hsub, dz, idx, scale)
+
+    tol = dict(rtol=3e-2, atol=3e-1 * b) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4 * b)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               **tol)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(oracle),
+                               **tol)
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,k,di,do,n", [
+    (1, 16, 32, 24, 64),
+    (2, 20, 130, 70, 50),
+    (8, 12, 33, 17, 30),
+])
 def test_sampled_matmul_batched(b, k, di, do, n, dtype):
-    """Batched kernel == sum_b of the per-sample oracle, across B, dtype
-    and ragged-last-block shapes (interpret mode on CPU)."""
+    """Batched kernels == sum_b of the per-sample oracle, across B,
+    dtype and ragged-last-block shapes (interpret mode on CPU)."""
+    cfg = icfg(bm=16, bn=16, bk=8)
     hs = jnp.asarray(RNG.randn(b, k, di), dtype)
     dz = jnp.asarray(RNG.randn(b, n, do), dtype)
     idx = jnp.asarray(RNG.randint(0, n, (b, k)), jnp.int32)
     scale = jnp.asarray(RNG.rand(b, k), jnp.float32)
-    got = ops.sampled_matmul(hs, dz, idx, scale, bm=16, bn=16, bk=8)
     want = ref.sampled_matmul_batched_ref(hs, dz, idx, scale)
     tol = dict(rtol=3e-2, atol=3e-1 * b) if dtype == jnp.bfloat16 \
         else dict(rtol=1e-4, atol=1e-4 * b)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+    for fn in (ops.sampled_matmul, ops.fused_sampled_dw):
+        got = fn(hs, dz, idx, scale, kernel=cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **tol)
+
+
+@pytest.mark.kernel
+def test_fused_ragged_k_not_dividing_bk():
+    """k % bk != 0: the in-kernel tail guard (pl.when + where mask) must
+    keep padded slots out of the reduction."""
+    b, k, di, do, n = 2, 13, 32, 16, 40
+    hs = jnp.asarray(RNG.randn(b, k, di), jnp.float32)
+    dz = jnp.asarray(RNG.randn(b, n, do), jnp.float32)
+    idx = jnp.asarray(RNG.randint(0, n, (b, k)), jnp.int32)
+    scale = jnp.asarray(RNG.rand(b, k), jnp.float32)
+    got = ops.fused_sampled_dw(hs, dz, idx, scale,
+                               kernel=icfg(bm=16, bn=16, bk=4))
+    want = ref.sampled_matmul_batched_ref(hs, dz, idx, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=2e-4)
 
 
 @pytest.mark.kernel
 def test_sampled_matmul_batched_matches_stacked_single():
     """The batch-summed kernel equals B independent single-sample kernel
     calls summed — the B == 1 path is exactly the degenerate case."""
+    cfg = icfg(bm=16, bn=16, bk=8)
     b, k, di, do, n = 3, 16, 32, 24, 40
     hs = jnp.asarray(RNG.randn(b, k, di), jnp.float32)
     dz = jnp.asarray(RNG.randn(b, n, do), jnp.float32)
     idx = jnp.asarray(RNG.randint(0, n, (b, k)), jnp.int32)
     scale = jnp.asarray(RNG.rand(b, k), jnp.float32)
-    got = ops.sampled_matmul(hs, dz, idx, scale, bm=16, bn=16, bk=8)
-    want = sum(np.asarray(ops.sampled_matmul(hs[i], dz[i], idx[i], scale[i],
-                                             bm=16, bn=16, bk=8))
+    got = ops.fused_sampled_dw(hs, dz, idx, scale, kernel=cfg)
+    want = sum(np.asarray(ops.fused_sampled_dw(hs[i], dz[i], idx[i],
+                                               scale[i], kernel=cfg))
                for i in range(b))
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
 
 
 def test_sampled_matmul_matches_linear_backward():
     """Kernel computes exactly the dW the custom_vjp produces."""
-    from repro.core.config import WTACRSConfig
     from repro.core import plans as plans_lib
 
     rng = np.random.RandomState(3)
@@ -135,18 +221,20 @@ def test_sampled_matmul_matches_linear_backward():
     p = jax.random.dirichlet(jax.random.PRNGKey(0), jnp.ones(64))
     plan = plans_lib.wtacrs_plan(p, 20, jax.random.PRNGKey(1))
     h_sub = h[0][plan.idx]
-    got = ops.sampled_matmul(h_sub, dz, plan.idx, plan.scale,
-                             bm=16, bn=16, bk=8)
     want = h_sub.T @ (dz[plan.idx] * plan.scale[:, None])
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    cfg = icfg(bm=16, bn=16, bk=8)
+    for fn in (ops.sampled_matmul, ops.fused_sampled_dw):
+        got = fn(h_sub, dz, plan.idx, plan.scale, kernel=cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.kernel
 @pytest.mark.parametrize("batch", [1, 2, 8])
 def test_shared_backward_routes_through_kernel(batch):
-    """use_kernel=True must produce the same shared-plan dW gradients as
-    the jnp dot_general path for every batch size."""
+    """kernel=pallas must produce the same shared-plan dW gradients as
+    the jnp dot_general path for every batch size (per-weight AND
+    shared-plan paths both dispatch to the fused kernel)."""
     from repro.core.config import WTACRSConfig
     from repro.core.linear import wtacrs_linear_shared
 
@@ -156,16 +244,73 @@ def test_shared_backward_routes_through_kernel(batch):
     w2 = jnp.asarray(rng.randn(32, 16) * 0.1, jnp.float32)
     key = jax.random.PRNGKey(5)
 
-    def loss(ws, use_kernel):
-        cfg = WTACRSConfig(budget=0.25, min_rows=4, use_kernel=use_kernel)
+    def loss(ws, backend):
+        cfg = WTACRSConfig(budget=0.25, min_rows=4,
+                           kernel=KernelConfig(backend=backend))
         a, b = wtacrs_linear_shared(h, ws, key=key, cfg=cfg)
         return jnp.sum(jnp.sin(a)) + jnp.sum(jnp.cos(b))
 
-    g_jnp = jax.grad(lambda ws: loss(ws, False))((w1, w2))
-    g_ker = jax.grad(lambda ws: loss(ws, True))((w1, w2))
+    g_jnp = jax.grad(lambda ws: loss(ws, "jnp"))((w1, w2))
+    g_ker = jax.grad(lambda ws: loss(ws, "pallas"))((w1, w2))
     for gj, gk in zip(g_jnp, g_ker):
         np.testing.assert_allclose(np.asarray(gk), np.asarray(gj),
                                    rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.kernel
+def test_per_weight_backward_routes_through_kernel():
+    """Per-weight path: fused-kernel grads == jnp grads."""
+    from repro.core.config import WTACRSConfig
+    from repro.core.linear import wtacrs_linear
+
+    rng = np.random.RandomState(12)
+    h = jnp.asarray(rng.randn(2, 48, 24), jnp.float32)
+    w = jnp.asarray(rng.randn(24, 20) * 0.1, jnp.float32)
+    key = jax.random.PRNGKey(9)
+
+    def loss(w, backend):
+        cfg = WTACRSConfig(budget=0.3, min_rows=4,
+                           kernel=KernelConfig(backend=backend))
+        return jnp.sum(wtacrs_linear(h, w, key=key, cfg=cfg) ** 2)
+
+    g_jnp = jax.grad(lambda w: loss(w, "jnp"))(w)
+    g_ker = jax.grad(lambda w: loss(w, "pallas"))(w)
+    np.testing.assert_allclose(np.asarray(g_ker), np.asarray(g_jnp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_use_kernel_deprecated_alias():
+    """use_kernel=True still routes to Pallas, with a DeprecationWarning
+    — and replace() round-trips don't re-fire the warning."""
+    import dataclasses
+
+    from repro.core.config import WTACRSConfig
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = WTACRSConfig(use_kernel=True)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert cfg.kernel.backend == "pallas" and cfg.kernel.use_pallas
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg2 = dataclasses.replace(cfg, budget=0.1)
+    assert not w and cfg2.kernel.backend == "pallas"
+    # the explicit config API clears the alias
+    fresh = cfg.with_kernel(KernelConfig(backend="jnp"))
+    assert not fresh.use_kernel and not fresh.kernel.use_pallas
+
+
+def test_kernel_config_validation():
+    with pytest.raises(ValueError):
+        KernelConfig(backend="cuda")
+    with pytest.raises(ValueError):
+        KernelConfig(bm=0)
+    with pytest.raises(ValueError):
+        KernelConfig(bk=-8)
+    cfg = KernelConfig()
+    assert cfg.interpret is not None     # resolved at construction
+    assert KernelConfig(backend="jnp").use_pallas is False
+    assert KernelConfig(backend="pallas").use_pallas is True
 
 
 @pytest.mark.parametrize("causal", [True, False])

@@ -7,6 +7,7 @@ import pytest
 from repro.core import (LoRAConfig, init_lora_params, lora_linear,
                         read_grad_norm_tap, wtacrs_linear)
 from repro.core.config import WTACRSConfig
+from repro.core.kernel_config import KernelConfig
 
 
 @pytest.fixture(scope="module")
@@ -159,22 +160,23 @@ def test_lora_zero_b_init_is_identity(setup):
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("batch", [1, 2, 8])
 def test_use_kernel_matches_jnp_path(batch, dtype):
-    """use_kernel=True (batched Pallas backward, interpret mode on CPU)
-    must match the jnp gather + dot_general path for all batch sizes and
-    dtypes — the dW both compute is bitwise the same contraction, only
-    the data movement differs."""
+    """The Pallas backend (fused batched backward, interpret mode on
+    CPU) must match the jnp gather + dot_general path for all batch
+    sizes and dtypes — the dW both compute is bitwise the same
+    contraction, only the data movement differs."""
     key = jax.random.PRNGKey(17)
     h = jax.random.normal(key, (batch, 48, 40)).astype(dtype)
     w = (jax.random.normal(jax.random.fold_in(key, 1), (40, 24))
          * 0.1).astype(dtype)
     plan_key = jax.random.PRNGKey(23)
 
-    def loss(ww, use_kernel):
-        cfg = WTACRSConfig(budget=0.25, min_rows=4, use_kernel=use_kernel)
+    def loss(ww, backend):
+        cfg = WTACRSConfig(budget=0.25, min_rows=4,
+                           kernel=KernelConfig(backend=backend))
         return jnp.sum(jnp.sin(wtacrs_linear(h, ww, key=plan_key, cfg=cfg)))
 
-    g_jnp = jax.grad(lambda ww: loss(ww, False))(w)
-    g_ker = jax.grad(lambda ww: loss(ww, True))(w)
+    g_jnp = jax.grad(lambda ww: loss(ww, "jnp"))(w)
+    g_ker = jax.grad(lambda ww: loss(ww, "pallas"))(w)
     tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
         else dict(rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(g_ker, np.float32),
@@ -190,13 +192,14 @@ def test_use_kernel_dh_and_tap_unaffected():
     w = jax.random.normal(jax.random.fold_in(key, 1), (24, 16)) * 0.1
     znorm = jnp.ones(h.shape[:2])
 
-    def f(hh, zn, use_kernel):
-        cfg = WTACRSConfig(budget=0.25, min_rows=4, use_kernel=use_kernel)
+    def f(hh, zn, backend):
+        cfg = WTACRSConfig(budget=0.25, min_rows=4,
+                           kernel=KernelConfig(backend=backend))
         return jnp.sum(jnp.sin(wtacrs_linear(
             hh, w, key=jax.random.PRNGKey(31), znorm=zn, cfg=cfg)))
 
-    gh_jnp, gz_jnp = jax.grad(f, argnums=(0, 1))(h, znorm, False)
-    gh_ker, gz_ker = jax.grad(f, argnums=(0, 1))(h, znorm, True)
+    gh_jnp, gz_jnp = jax.grad(f, argnums=(0, 1))(h, znorm, "jnp")
+    gh_ker, gz_ker = jax.grad(f, argnums=(0, 1))(h, znorm, "pallas")
     np.testing.assert_array_equal(np.asarray(gh_jnp), np.asarray(gh_ker))
     np.testing.assert_array_equal(np.asarray(gz_jnp), np.asarray(gz_ker))
 
