@@ -11,15 +11,22 @@ cross-checker, which traces registry configs under ``eval_shape``):
     divisibility guards, per-block VMEM footprint vs budget,
     f32-accumulator discipline for MXU ops.
   * ``policy_check`` (PT*): tag-glob policy rules cross-checked
-    against the tags each registry architecture actually emits.
+    against the tags each registry architecture actually emits, plus
+    pure-AST schedule-termination proofs (PT008).
+
+The families share one ``dataflow.Program`` — per-module def-use
+chains and an intra-package call/closure graph that propagate
+traced-scope membership through assignments, containers, builder
+returns, decorators, and argument flow.
 
 Run with ``python -m repro.analysis [paths...]``; see ``--help``.
 """
-from repro.analysis.cli import analyze_paths, main
+from repro.analysis.cli import analyze_paths, changed_files, main
 from repro.analysis.findings import (ERROR, NOTE, RULES, WARNING,
-                                     Baseline, Finding, sort_findings)
+                                     Baseline, Finding, sort_findings,
+                                     to_sarif)
 
 __all__ = [
-    "analyze_paths", "main", "Finding", "Baseline", "sort_findings",
-    "RULES", "ERROR", "WARNING", "NOTE",
+    "analyze_paths", "changed_files", "main", "Finding", "Baseline",
+    "sort_findings", "to_sarif", "RULES", "ERROR", "WARNING", "NOTE",
 ]

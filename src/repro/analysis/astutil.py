@@ -17,7 +17,8 @@ from __future__ import annotations
 import ast
 import dataclasses
 import os
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import (AbstractSet, Dict, Iterator, List, Optional,
+                    Sequence, Tuple)
 
 # Directory parts that are never analyzed (intentionally-bad fixture
 # snippets live under a ``fixtures`` dir; see tests/test_analysis.py).
@@ -26,6 +27,23 @@ EXCLUDED_PARTS = ("__pycache__", ".git", "fixtures", ".venv", "build")
 # Attribute accesses that read static (trace-time) properties of an
 # array, never its runtime values.
 STATIC_ATTRS = ("shape", "ndim", "dtype", "size", "sharding", "weak_type")
+
+# Attributes that reach static configuration objects in this codebase
+# (``ctx.policy``, ``self.cfg``): the objects hanging off these names
+# are frozen config dataclasses, never traced arrays, so reads through
+# them do not propagate traced-value taint even when the carrier (a Ctx
+# holding a traced key) does.
+CONFIG_ATTRS = ("policy", "cfg", "config", "spec")
+
+# Bare names that, by convention, bind config objects wherever they
+# appear (``policy.config_for(t)`` inside a traced helper).
+CONFIG_NAMES = ("cfg", "config", "policy", "spec")
+
+# Calls whose results are static regardless of their arguments: type
+# probes plus the functional forms of the static attrs (``jnp.ndim(x)``,
+# ``jnp.shape(x)``).
+_STATIC_CALL_NAMES = ("len", "isinstance", "type")
+_STATIC_CALL_LEAVES = ("ndim", "shape", "size")
 
 DTYPE_BYTES = {
     "float64": 8, "int64": 8, "uint64": 8,
@@ -134,6 +152,88 @@ def load_modules(paths: Sequence[str]) -> Tuple[List[Module], List[str]]:
         except SyntaxError:
             broken.append(f)
     return mods, broken
+
+
+def own_scope_nodes(fn: ast.AST) -> Iterator[ast.AST]:
+    """Nodes of ``fn``'s own scope, nested function/class bodies
+    excluded (their statements belong to the inner scope)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def is_config_chain(node: ast.AST) -> bool:
+    """Whether an expression denotes a static config object — a bare
+    :data:`CONFIG_NAMES` name or any attribute path passing through a
+    :data:`CONFIG_ATTRS` link (``ctx.policy``, ``self.cfg.opt``)."""
+    if isinstance(node, ast.Name):
+        return node.id in CONFIG_NAMES
+    if isinstance(node, ast.Attribute):
+        return node.attr in CONFIG_ATTRS or is_config_chain(node.value)
+    return False
+
+
+def touches(node: ast.AST, names: AbstractSet[str]) -> bool:
+    """Whether evaluating ``node`` reads runtime data of any name in
+    ``names``.  Static accesses are escapes:
+
+      * ``.shape``/``.ndim``/... (:data:`STATIC_ATTRS`) and their
+        functional forms (``len()``/``jnp.ndim()``/``jnp.shape()``),
+      * reads through config carriers (:data:`CONFIG_ATTRS`:
+        ``ctx.policy.*`` is a frozen-dataclass read, not a value read),
+      * the container side of an ``in`` test (``"k" in state`` is a
+        structure probe),
+      * ``x is None`` / ``x is not None`` (presence probe: under jit a
+        traced value is never None, so the branch is structural),
+      * ``.keys()`` of a dict pytree (static structure under jit).
+    """
+    if isinstance(node, ast.Name):
+        return node.id in names
+    if isinstance(node, ast.Attribute):
+        if node.attr in STATIC_ATTRS or node.attr in CONFIG_ATTRS:
+            return False
+        return touches(node.value, names)
+    if isinstance(node, ast.Call):
+        name = dotted(node.func)
+        if name in _STATIC_CALL_NAMES:
+            return False
+        if (name and "." in name
+                and name.rsplit(".", 1)[-1] in _STATIC_CALL_LEAVES):
+            return False
+        func_reads = False
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr == "keys" and not node.args:
+                return False
+            # methods OF a config object return config — the args only
+            # select which entry (``ctx.policy.config_for(tag)``)
+            if is_config_chain(node.func.value):
+                return False
+            # a method call on a traced value reads it
+            # (``batch.sum()``), modulo the static-attr escapes above
+            func_reads = touches(node.func, names)
+        return func_reads or any(
+            touches(a, names) for a in node.args) or any(
+            touches(kw.value, names) for kw in node.keywords)
+    if isinstance(node, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) \
+                and all(isinstance(c, ast.Constant) and c.value is None
+                        for c in node.comparators):
+            return False
+        ops_in = [isinstance(op, (ast.In, ast.NotIn)) for op in node.ops]
+        if any(ops_in):
+            sides = [node.left] + list(node.comparators)
+            checked = [sides[0]] + [
+                c for c, is_in in zip(sides[1:], ops_in) if not is_in]
+            return any(touches(s, names) for s in checked)
+    for child in ast.iter_child_nodes(node):
+        if touches(child, names):
+            return True
+    return False
 
 
 def assignments(fn: ast.AST) -> Dict[str, ast.expr]:

@@ -9,14 +9,16 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 from typing import List, Optional, Sequence
 
-from repro.analysis import jax_lints, pallas_contracts, policy_check
+from repro.analysis import (dataflow, jax_lints, pallas_contracts,
+                            policy_check)
 from repro.analysis.astutil import load_modules
 from repro.analysis.findings import (ERROR, NOTE, RULES, SEVERITY_ORDER,
                                      WARNING, Baseline, Finding,
-                                     sort_findings)
+                                     sort_findings, to_sarif)
 
 DEFAULT_BASELINE = "analysis-baseline.json"
 
@@ -25,20 +27,50 @@ def analyze_paths(paths: Sequence[str], *, policy: bool = True,
                   vmem_budget: Optional[int] = None,
                   tag_universe: Optional[dict] = None) -> List[Finding]:
     """Run every analyzer family over ``paths`` and return raw findings
-    (no baseline filtering).  The main entry point for tests."""
+    (no baseline filtering).  The main entry point for tests.
+
+    The dataflow program (def-use chains + call/closure graph) is
+    built once here and shared by every family that consumes it."""
     modules, broken = load_modules(paths)
     findings: List[Finding] = [
         Finding(rule="AN001", path=p, line=1, col=1, symbol="<module>",
                 message="file does not parse; analyzers skipped it")
         for p in broken
     ]
-    findings.extend(jax_lints.check(modules))
+    program = dataflow.Program.build(modules)
+    findings.extend(jax_lints.check(modules, program=program))
     findings.extend(pallas_contracts.check(
-        modules, vmem_budget=vmem_budget))
+        modules, vmem_budget=vmem_budget, program=program))
     if policy:
         findings.extend(policy_check.check(modules,
                                            universe=tag_universe))
     return sort_findings(findings)
+
+
+def changed_files(base: str, paths: Sequence[str]) -> Optional[List[str]]:
+    """Python files changed vs ``base`` (plus untracked ones), kept
+    only when they fall under one of ``paths``.  None on git failure."""
+    try:
+        diff = subprocess.run(
+            ["git", "diff", "--name-only", base],
+            capture_output=True, text=True, check=True)
+        untracked = subprocess.run(
+            ["git", "ls-files", "--others", "--exclude-standard"],
+            capture_output=True, text=True, check=True)
+    except (OSError, subprocess.CalledProcessError):
+        return None
+    names = [n for n in (diff.stdout + untracked.stdout).splitlines()
+             if n.endswith(".py")]
+    roots = [os.path.abspath(p) for p in paths]
+    out = []
+    for n in sorted(set(names)):
+        full = os.path.abspath(n)
+        if not os.path.exists(full):
+            continue          # deleted files have nothing to analyze
+        if any(full == r or full.startswith(r + os.sep)
+               for r in roots):
+            out.append(full)
+    return out
 
 
 def _gates(fail_on: str):
@@ -63,8 +95,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     "(PT*).")
     ap.add_argument("paths", nargs="*", default=None,
                     help="files or directories (default: src/repro)")
+    ap.add_argument("--format", choices=["text", "json", "sarif"],
+                    default=None,
+                    help="output format (default: text); sarif emits a "
+                         "SARIF 2.1.0 document for code-scanning "
+                         "upload")
     ap.add_argument("--json", action="store_true",
-                    help="emit findings as a JSON document")
+                    help="alias for --format json")
+    ap.add_argument("--changed-only", nargs="?", const="HEAD",
+                    default=None, metavar="BASE",
+                    help="analyze only .py files changed vs BASE "
+                         "(git diff --name-only; default base: HEAD) "
+                         "plus untracked ones, intersected with the "
+                         "given paths — the pre-commit mode")
     ap.add_argument("--baseline", default=None, metavar="FILE",
                     help=f"suppression baseline (default: "
                          f"{DEFAULT_BASELINE} when it exists)")
@@ -93,11 +136,26 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(_list_rules())
         return 0
 
+    fmt = args.format or ("json" if args.json else "text")
+
     paths = list(args.paths) or ["src/repro"]
     for p in paths:
         if not os.path.exists(p):
             print(f"error: no such path: {p}", file=sys.stderr)
             return 2
+
+    if args.changed_only is not None:
+        changed = changed_files(args.changed_only, paths)
+        if changed is None:
+            print(f"error: git diff against "
+                  f"{args.changed_only!r} failed (not a git "
+                  f"checkout, or unknown ref)", file=sys.stderr)
+            return 2
+        if not changed:
+            print("repro.analysis: no changed python files under "
+                  "the given paths")
+            return 0
+        paths = changed
 
     vmem = (int(args.vmem_budget_mb * 1024 * 1024)
             if args.vmem_budget_mb is not None else None)
@@ -137,7 +195,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     gate = _gates(args.fail_on)
     failing = [f for f in findings if gate(f)]
 
-    if args.json:
+    if fmt == "json":
         doc = {
             "version": 1,
             "findings": [f.to_json() for f in findings],
@@ -145,6 +203,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             "failing": len(failing),
         }
         print(json.dumps(doc, indent=2))
+    elif fmt == "sarif":
+        print(json.dumps(to_sarif(findings), indent=2))
     else:
         for f in findings:
             print(f.render())

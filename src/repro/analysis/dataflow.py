@@ -1,0 +1,1026 @@
+"""Dataflow layer: def-use chains, call/closure graph, traced-scope taint.
+
+The PR-7 analyzers decided "is this function traced?" with a syntactic
+heuristic over single function bodies (``jax_lints.traced_functions``):
+a ``@jit`` decorator, an inner def returned *by name* from a ``make_*``
+builder, or a function handed *by name* to ``lax.scan`` & friends.
+That misses exactly the flows this codebase uses — step functions
+stashed in dicts (``{"step": fn}``), builder products re-bound through
+assignments before being jitted, kernels selected from a table, and
+functions jitted by a helper they were passed to as an argument.
+
+This module closes the gap with a small whole-program analysis over
+the parsed modules (still pure ``ast`` — analyzed code is never
+imported):
+
+  1. **Abstract values** (:class:`AVal`): every expression evaluates to
+     the set of *function definitions* it may reference, with enough
+     container structure (tuple elements, constant dict keys, a ``*``
+     wildcard slot) to survive packing and unpacking.
+  2. **Module/function environments**: statements are interpreted in
+     order per scope; ``import``/``from-import`` link environments
+     across modules of the analyzed set (the intra-package call graph),
+     and ``self.x = ...`` assignments accumulate into a per-class
+     attribute environment.
+  3. **Traced-scope propagation**: a function is traced when a
+     reference to it flows into a tracing consumer (``jit`` /
+     ``pl.pallas_call`` / ``lax.scan|cond|fori_loop|while_loop`` /
+     ``shard_map`` / ``custom_vjp``, as decorator or call — through any
+     number of assignments, containers, ``functools.partial`` wrappers
+     and call returns), when it is reachable in the *return value* of a
+     ``make_*`` builder (the step-builder contract, now resolved
+     through dict/tuple packing), when it is nested inside a traced
+     function, or when a traced function *calls* it (call-graph
+     closure).
+  4. **Taint**: within a traced function, the traced *values* are its
+     positional parameters (kw-only params are the repo's static-config
+     idiom) — except for functions traced only via the call graph,
+     whose parameters are tainted exactly where tainted arguments flow
+     in at traced call sites (so static config passed positionally to
+     model code stays untainted).  Taint then propagates through the
+     function's own def-use chains (assignments, tuple unpacking,
+     loop targets, comprehensions), with the same static escapes as
+     expression checks (``.shape``, ``len()``, ``in``-probes).
+
+The solver is a bounded fixpoint: function summaries and parameter
+bindings grow monotonically over a few whole-program rounds (abstract
+values are depth- and width-capped, so termination is structural, not
+hopeful).  Dynamic flow the lattice cannot represent (``getattr``
+dispatch, ``**kwargs`` forwarding) is simply not resolved — the
+heuristic fallback in ``jax_lints`` covers those functions at NOTE
+severity (:meth:`Program.fallback_functions`).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+
+MAX_ROUNDS = 4          # whole-program fixpoint rounds
+MAX_DEPTH = 5           # AVal structure depth cap
+MAX_FUNCS = 64          # AVal function-set width cap
+WILDCARD = "*"          # items slot for non-constant container keys
+
+# Leaves that are unambiguous tracing consumers wherever they appear.
+_CONSUMER_LEAVES = frozenset((
+    "fori_loop", "while_loop", "shard_map", "pallas_call",
+    "custom_vjp", "custom_jvp",
+))
+# Leaves that are consumers only under a lax-ish prefix ("scan" or
+# "cond" alone could be anything).
+_LAX_ONLY_LEAVES = frozenset(("scan", "cond"))
+
+
+def is_tracing_consumer(name: Optional[str]) -> bool:
+    """Whether a dotted callable name traces the functions handed to
+    it (``jax.jit``, ``self._jit``, ``pl.pallas_call``, ...)."""
+    if not name:
+        return False
+    head, _, leaf = name.rpartition(".")
+    if leaf.endswith("jit"):
+        return True
+    if leaf in _CONSUMER_LEAVES:
+        return True
+    if leaf in _LAX_ONLY_LEAVES:
+        return bool(head) and head.rsplit(".", 1)[-1] == "lax"
+    return False
+
+
+# ---------------------------------------------------------------------------
+# abstract values
+# ---------------------------------------------------------------------------
+
+class AVal:
+    """Abstract value: the function defs an expression may reference,
+    plus container structure for packing/unpacking.  Immutable-by-
+    convention — every operation builds a new instance."""
+
+    __slots__ = ("funcs", "mods", "elems", "items")
+
+    def __init__(self, funcs: Iterable[int] = (),
+                 mods: Iterable[str] = (),
+                 elems: Optional[Tuple["AVal", ...]] = None,
+                 items: Optional[Dict[object, "AVal"]] = None):
+        self.funcs: FrozenSet[int] = frozenset(funcs)
+        self.mods: FrozenSet[str] = frozenset(mods)
+        self.elems = elems
+        self.items: Dict[object, "AVal"] = dict(items) if items else {}
+
+    def is_empty(self) -> bool:
+        return (not self.funcs and not self.mods and self.elems is None
+                and not self.items)
+
+    def all_funcs(self) -> Set[int]:
+        """Every function id reachable anywhere in the structure."""
+        out: Set[int] = set(self.funcs)
+        for sub in (self.elems or ()):
+            out |= sub.all_funcs()
+        for sub in self.items.values():
+            out |= sub.all_funcs()
+        return out
+
+    def member(self) -> "AVal":
+        """Join of everything an unknown index/key could yield."""
+        parts = list(self.elems or ()) + list(self.items.values())
+        return merge_all(parts)
+
+    def index(self, key: object) -> "AVal":
+        """Constant subscript: ``aval[key]``."""
+        if isinstance(key, int) and self.elems is not None \
+                and 0 <= key < len(self.elems):
+            out = self.elems[key]
+        elif key in self.items:
+            out = self.items[key]
+        else:
+            return self.member() if WILDCARD not in self.items \
+                else merge(self.member(), self.items[WILDCARD])
+        if WILDCARD in self.items:
+            out = merge(out, self.items[WILDCARD])
+        return out
+
+    def with_item(self, key: object, val: "AVal") -> "AVal":
+        items = dict(self.items)
+        k = key if isinstance(key, (str, int, bool)) else WILDCARD
+        items[k] = merge(items.get(k, AVal()), val)
+        return AVal(self.funcs, self.mods, self.elems, items)
+
+    def key(self) -> object:
+        """Hashable structural signature (fixpoint change detection)."""
+        return (tuple(sorted(self.funcs)), tuple(sorted(self.mods)),
+                None if self.elems is None
+                else tuple(e.key() for e in self.elems),
+                tuple(sorted(((repr(k), v.key())
+                              for k, v in self.items.items()))))
+
+    def __repr__(self) -> str:  # debugging aid
+        bits = []
+        if self.funcs:
+            bits.append(f"funcs={sorted(self.funcs)}")
+        if self.mods:
+            bits.append(f"mods={sorted(self.mods)}")
+        if self.elems is not None:
+            bits.append(f"elems={list(self.elems)}")
+        if self.items:
+            bits.append(f"items={self.items}")
+        return f"AVal({', '.join(bits)})"
+
+
+def _flatten(v: AVal) -> AVal:
+    return AVal(funcs=v.all_funcs(), mods=v.mods)
+
+
+def merge(a: AVal, b: AVal, depth: int = 0) -> AVal:
+    if a.is_empty():
+        return b
+    if b.is_empty():
+        return a
+    if depth >= MAX_DEPTH:
+        return AVal(funcs=a.all_funcs() | b.all_funcs(),
+                    mods=a.mods | b.mods)
+    funcs = a.funcs | b.funcs
+    if len(funcs) > MAX_FUNCS:
+        return AVal(funcs=a.all_funcs() | b.all_funcs(),
+                    mods=a.mods | b.mods)
+    elems: Optional[Tuple[AVal, ...]]
+    items = dict(a.items)
+    if a.elems is not None and b.elems is not None \
+            and len(a.elems) == len(b.elems):
+        elems = tuple(merge(x, y, depth + 1)
+                      for x, y in zip(a.elems, b.elems))
+    elif a.elems is None and b.elems is None:
+        elems = None
+    else:
+        # arity conflict: collapse positional structure into the
+        # wildcard slot so unpacking stays conservative
+        elems = None
+        spill = merge_all([*(a.elems or ()), *(b.elems or ())],
+                          depth + 1)
+        items[WILDCARD] = merge(items.get(WILDCARD, AVal()), spill,
+                                depth + 1)
+    for k, v in b.items.items():
+        items[k] = merge(items.get(k, AVal()), v, depth + 1) \
+            if k in items else v
+    return AVal(funcs=funcs, mods=a.mods | b.mods, elems=elems,
+                items=items)
+
+
+def merge_all(vals: Iterable[AVal], depth: int = 0) -> AVal:
+    out = AVal()
+    for v in vals:
+        out = merge(out, v, depth)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# program index
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FuncInfo:
+    """One function definition in the analyzed set."""
+
+    index: int
+    module: astutil.Module
+    node: ast.FunctionDef
+    qualname: str
+    parent: Optional[int]          # enclosing FunctionDef's index
+    cls: Optional[ast.ClassDef]    # immediately enclosing class
+
+    @property
+    def is_method(self) -> bool:
+        return self.cls is not None
+
+    def positional_params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args]
+        if self.is_method and names and names[0] in ("self", "cls"):
+            names = names[1:]
+        return names
+
+
+class _Scope:
+    """One lexical scope's bindings, chained to the enclosing scope."""
+
+    __slots__ = ("bindings", "parent", "owner")
+
+    def __init__(self, parent: Optional["_Scope"] = None,
+                 owner: Optional[FuncInfo] = None):
+        self.bindings: Dict[str, AVal] = {}
+        self.parent = parent
+        self.owner = owner
+
+    def get(self, name: str) -> AVal:
+        scope: Optional[_Scope] = self
+        while scope is not None:
+            if name in scope.bindings:
+                return scope.bindings[name]
+            scope = scope.parent
+        return AVal()
+
+    def bind(self, name: str, val: AVal) -> None:
+        self.bindings[name] = merge(self.bindings.get(name, AVal()), val)
+
+
+def _module_dotted(path: str) -> List[str]:
+    """All dotted-name suffixes a file could be imported as
+    (``repro.launch.train_steps`` -> also ``launch.train_steps``,
+    ``train_steps``)."""
+    norm = os.path.normpath(path).replace(os.sep, "/")
+    if norm.endswith("/__init__.py"):
+        norm = norm[: -len("/__init__.py")]
+    elif norm.endswith(".py"):
+        norm = norm[:-3]
+    parts = [p for p in norm.split("/") if p and p != "."]
+    out = []
+    for i in range(max(0, len(parts) - 4), len(parts)):
+        out.append(".".join(parts[i:]))
+    return out
+
+
+class Program:
+    """Whole-program dataflow index over a set of parsed modules.
+
+    Build once with :meth:`build`; query:
+
+      * :meth:`traced_functions` — dataflow-resolved traced scopes of a
+        module (supersedes ``jax_lints.traced_functions``),
+      * :meth:`fallback_functions` — builder-idiom candidates the
+        lattice could NOT prove traced (analyzed at NOTE severity),
+      * :meth:`tainted_names` — traced-value names within a traced
+        function (positional params + def-use closure),
+      * :meth:`eval_in` — abstract value of an expression in a
+        function/module scope (kernel resolution, tick-path step fns).
+    """
+
+    def __init__(self, modules: List[astutil.Module]):
+        self.modules = list(modules)
+        self.funcs: List[FuncInfo] = []
+        self._by_node: Dict[int, int] = {}
+        self._mod_scopes: Dict[str, _Scope] = {}
+        self._fn_scopes: Dict[int, _Scope] = {}
+        self._class_envs: Dict[int, Dict[str, AVal]] = {}
+        self._summaries: Dict[int, AVal] = {}
+        self._param_vals: Dict[Tuple[int, str], AVal] = {}
+        self._call_edges: Dict[int, Set[int]] = {}
+        self._consumer_traced: Set[int] = set()
+        self._decorator_traced: Set[int] = set()
+        self.traced: Set[int] = set()
+        self._taints: Dict[int, Set[str]] = {}
+        self._taint_seeds: Dict[int, Set[str]] = {}
+        # params proven static per function: bound by functools.partial
+        # before jit, or named in static_argnums/static_argnames
+        self._static_params: Dict[int, Set[str]] = {}
+        self._import_table: Dict[str, str] = {}
+        self._index()
+
+    # -- construction ----------------------------------------------------
+
+    @classmethod
+    def build(cls, modules: List[astutil.Module]) -> "Program":
+        prog = cls(modules)
+        prog._solve()
+        return prog
+
+    def _index(self) -> None:
+        ambiguous: Set[str] = set()
+        for mod in self.modules:
+            for name in _module_dotted(mod.path):
+                if name in self._import_table:
+                    ambiguous.add(name)
+                self._import_table[name] = mod.path
+            for fn in mod.functions():
+                idx = len(self.funcs)
+                parent: Optional[int] = None
+                cls_node: Optional[ast.ClassDef] = None
+                cur = mod.parent(fn)
+                while cur is not None:
+                    if cls_node is None and isinstance(cur, ast.ClassDef):
+                        cls_node = cur
+                    if isinstance(cur, ast.FunctionDef):
+                        parent = self._by_node.get(id(cur))
+                        break
+                    cur = mod.parent(cur)
+                self.funcs.append(FuncInfo(
+                    index=idx, module=mod, node=fn,
+                    qualname=mod.symbol_for(fn), parent=parent,
+                    cls=cls_node))
+                self._by_node[id(fn)] = idx
+        for name in ambiguous:
+            # two analyzed files claim the same dotted suffix — only
+            # drop the short alias, fully-qualified suffixes stay
+            if "." not in name:
+                self._import_table.pop(name, None)
+
+    def info_for(self, fn: ast.FunctionDef) -> Optional[FuncInfo]:
+        idx = self._by_node.get(id(fn))
+        return self.funcs[idx] if idx is not None else None
+
+    # -- fixpoint --------------------------------------------------------
+
+    def _solve(self) -> None:
+        last_sig: object = None
+        for _ in range(MAX_ROUNDS):
+            self._pass()
+            sig = (frozenset(self._consumer_traced),
+                   tuple(sorted((i, v.key())
+                                for i, v in self._summaries.items())))
+            if sig == last_sig:
+                break
+            last_sig = sig
+        self._close_traced()
+        self._compute_taints()
+
+    def _pass(self) -> None:
+        for mod in self.modules:
+            scope = _Scope()
+            self._mod_scopes[mod.path] = scope
+            self._exec_body(mod.tree.body, scope, mod, None)
+        # class envs: method defs + self.attr assignments (all methods)
+        for info in self.funcs:
+            if info.cls is None or info.parent is not None:
+                continue
+            env = self._class_envs.setdefault(id(info.cls), {})
+            env[info.node.name] = merge(
+                env.get(info.node.name, AVal()),
+                AVal(funcs={info.index}))
+        for info in self.funcs:
+            scope = self._function_scope(info)
+            self._fn_scopes[info.index] = scope
+            summary = self._exec_body(info.node.body, scope,
+                                      info.module, info)
+            self._summaries[info.index] = merge(
+                self._summaries.get(info.index, AVal()), summary)
+
+    def _function_scope(self, info: FuncInfo) -> _Scope:
+        parent_scope = (self._fn_scopes.get(info.parent)
+                        if info.parent is not None else None)
+        if parent_scope is None:
+            parent_scope = self._mod_scopes.get(info.module.path)
+        scope = _Scope(parent=parent_scope, owner=info)
+        a = info.node.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            bound = self._param_vals.get((info.index, p.arg))
+            if bound is not None:
+                scope.bindings[p.arg] = bound
+            else:
+                scope.bindings[p.arg] = AVal()
+        return scope
+
+    # -- statement interpretation ---------------------------------------
+
+    def _exec_body(self, body: List[ast.stmt], scope: _Scope,
+                   mod: astutil.Module,
+                   info: Optional[FuncInfo]) -> AVal:
+        summary = AVal()
+        for stmt in body:
+            summary = merge(summary,
+                            self._exec_stmt(stmt, scope, mod, info))
+        return summary
+
+    def _exec_stmt(self, stmt: ast.stmt, scope: _Scope,
+                   mod: astutil.Module,
+                   info: Optional[FuncInfo]) -> AVal:
+        summary = AVal()
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            idx = self._by_node.get(id(stmt))
+            if idx is not None:
+                scope.bind(stmt.name, AVal(funcs={idx}))
+                self._check_decorators(self.funcs[idx], scope, mod)
+            return summary
+        if isinstance(stmt, ast.ClassDef):
+            env = self._class_envs.setdefault(id(stmt), {})
+            for sub in stmt.body:
+                if isinstance(sub, ast.Assign):
+                    val = self._eval(sub.value, scope, mod)
+                    for t in sub.targets:
+                        if isinstance(t, ast.Name):
+                            env[t.id] = merge(env.get(t.id, AVal()), val)
+            return summary
+        if isinstance(stmt, (ast.Import, ast.ImportFrom)):
+            self._exec_import(stmt, scope)
+            return summary
+        if isinstance(stmt, ast.Assign):
+            val = self._eval(stmt.value, scope, mod)
+            for t in stmt.targets:
+                self._bind_target(t, val, scope, mod)
+            return summary
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._bind_target(stmt.target,
+                              self._eval(stmt.value, scope, mod),
+                              scope, mod)
+            return summary
+        if isinstance(stmt, ast.AugAssign):
+            self._eval(stmt.value, scope, mod)
+            return summary
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                return self._eval(stmt.value, scope, mod)
+            return summary
+        if isinstance(stmt, ast.Expr):
+            self._eval(stmt.value, scope, mod)
+            return summary
+        if isinstance(stmt, (ast.If, ast.While)):
+            self._eval(stmt.test, scope, mod)
+            summary = merge(summary, self._exec_body(stmt.body, scope,
+                                                     mod, info))
+            return merge(summary, self._exec_body(stmt.orelse, scope,
+                                                  mod, info))
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            it = self._eval(stmt.iter, scope, mod)
+            self._bind_target(stmt.target, it.member(), scope, mod)
+            summary = merge(summary, self._exec_body(stmt.body, scope,
+                                                     mod, info))
+            return merge(summary, self._exec_body(stmt.orelse, scope,
+                                                  mod, info))
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                v = self._eval(item.context_expr, scope, mod)
+                if item.optional_vars is not None:
+                    self._bind_target(item.optional_vars, v, scope, mod)
+            return self._exec_body(stmt.body, scope, mod, info)
+        if isinstance(stmt, ast.Try):
+            for part in (stmt.body, stmt.orelse, stmt.finalbody):
+                summary = merge(summary,
+                                self._exec_body(part, scope, mod, info))
+            for h in stmt.handlers:
+                summary = merge(summary, self._exec_body(h.body, scope,
+                                                         mod, info))
+            return summary
+        return summary
+
+    def _exec_import(self, stmt: ast.stmt, scope: _Scope) -> None:
+        if isinstance(stmt, ast.ImportFrom):
+            if stmt.module is None:
+                return
+            target = self._import_table.get(stmt.module)
+            for alias in stmt.names:
+                if alias.name == "*":
+                    continue
+                bound = alias.asname or alias.name
+                submod = self._import_table.get(
+                    f"{stmt.module}.{alias.name}")
+                if submod is not None:
+                    scope.bind(bound, AVal(mods={submod}))
+                elif target is not None:
+                    member = self._module_member(target, alias.name)
+                    if not member.is_empty():
+                        scope.bind(bound, member)
+        elif isinstance(stmt, ast.Import):
+            for alias in stmt.names:
+                target = self._import_table.get(alias.name)
+                if target is None:
+                    continue
+                bound = alias.asname or alias.name.split(".")[0]
+                if alias.asname is not None or "." not in alias.name:
+                    scope.bind(bound, AVal(mods={target}))
+
+    def _module_member(self, path: str, name: str) -> AVal:
+        scope = self._mod_scopes.get(path)
+        if scope is not None and name in scope.bindings:
+            return scope.bindings[name]
+        return AVal()
+
+    def _bind_target(self, target: ast.expr, val: AVal, scope: _Scope,
+                     mod: astutil.Module) -> None:
+        if isinstance(target, ast.Name):
+            scope.bind(target.id, val)
+        elif isinstance(target, ast.Starred):
+            self._bind_target(target.value, val.member(), scope, mod)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            elts = target.elts
+            if val.elems is not None and len(val.elems) == len(elts):
+                for t, v in zip(elts, val.elems):
+                    self._bind_target(t, v, scope, mod)
+            else:
+                spread = val.member()
+                for t in elts:
+                    self._bind_target(t, spread, scope, mod)
+        elif isinstance(target, ast.Subscript):
+            base = target.value
+            key: object = WILDCARD
+            if isinstance(target.slice, ast.Constant):
+                key = target.slice.value
+            if isinstance(base, ast.Name):
+                scope.bind(base.id,
+                           scope.get(base.id).with_item(key, val))
+            elif (isinstance(base, ast.Attribute)
+                  and isinstance(base.value, ast.Name)
+                  and base.value.id == "self"):
+                env = self._self_env(scope)
+                if env is not None:
+                    cur = env.get(base.attr, AVal())
+                    env[base.attr] = cur.with_item(key, val)
+        elif isinstance(target, ast.Attribute):
+            if isinstance(target.value, ast.Name) \
+                    and target.value.id == "self":
+                env = self._self_env(scope)
+                if env is not None:
+                    env[target.attr] = merge(
+                        env.get(target.attr, AVal()), val)
+
+    def _self_env(self, scope: _Scope) -> Optional[Dict[str, AVal]]:
+        cur: Optional[_Scope] = scope
+        while cur is not None:
+            if cur.owner is not None and cur.owner.cls is not None:
+                return self._class_envs.setdefault(
+                    id(cur.owner.cls), {})
+            cur = cur.parent
+        return None
+
+    # -- expression evaluation ------------------------------------------
+
+    def _eval(self, node: ast.expr, scope: _Scope,
+              mod: astutil.Module) -> AVal:
+        if isinstance(node, ast.Name):
+            return scope.get(node.id)
+        if isinstance(node, ast.Attribute):
+            if isinstance(node.value, ast.Name) \
+                    and node.value.id == "self":
+                env = self._self_env(scope)
+                if env is not None and node.attr in env:
+                    return env[node.attr]
+                return AVal()
+            base = self._eval(node.value, scope, mod)
+            out = AVal()
+            for m in base.mods:
+                out = merge(out, self._module_member(m, node.attr))
+            return out
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return AVal(elems=tuple(self._eval(e, scope, mod)
+                                    for e in node.elts))
+        if isinstance(node, ast.Dict):
+            items: Dict[object, AVal] = {}
+            for k, v in zip(node.keys, node.values):
+                val = self._eval(v, scope, mod)
+                key: object = WILDCARD
+                if isinstance(k, ast.Constant) \
+                        and isinstance(k.value, (str, int, bool)):
+                    key = k.value
+                items[key] = merge(items.get(key, AVal()), val)
+            return AVal(items=items)
+        if isinstance(node, ast.Subscript):
+            base = self._eval(node.value, scope, mod)
+            if isinstance(node.slice, ast.Constant):
+                return base.index(node.slice.value)
+            self._eval_children(node.slice, scope, mod)
+            return base.member()
+        if isinstance(node, ast.Call):
+            return self._eval_call(node, scope, mod)
+        if isinstance(node, ast.IfExp):
+            self._eval(node.test, scope, mod)
+            return merge(self._eval(node.body, scope, mod),
+                         self._eval(node.orelse, scope, mod))
+        if isinstance(node, ast.BoolOp):
+            return merge_all(self._eval(v, scope, mod)
+                             for v in node.values)
+        if isinstance(node, ast.NamedExpr):
+            val = self._eval(node.value, scope, mod)
+            self._bind_target(node.target, val, scope, mod)
+            return val
+        if isinstance(node, ast.Starred):
+            return self._eval(node.value, scope, mod).member()
+        self._eval_children(node, scope, mod)
+        return AVal()
+
+    def _eval_children(self, node: ast.AST, scope: _Scope,
+                       mod: astutil.Module) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self._eval(child, scope, mod)
+
+    def _eval_call(self, node: ast.Call, scope: _Scope,
+                   mod: astutil.Module) -> AVal:
+        name = astutil.call_name(node)
+        arg_vals = [self._eval(a, scope, mod) for a in node.args]
+        kw_vals = [(kw.arg, self._eval(kw.value, scope, mod))
+                   for kw in node.keywords]
+
+        # functools.partial(f, ...) keeps referencing f; whatever it
+        # binds is captured concretely at partial-construction time, so
+        # those params are static if f is later jitted (api/run.py's
+        # ``jit(partial(sample_logits, top_k=top_k))`` idiom)
+        if name and name.rsplit(".", 1)[-1] == "partial" and arg_vals:
+            for fidx in arg_vals[0].all_funcs():
+                bound = self._static_params.setdefault(fidx, set())
+                params = self.funcs[fidx].positional_params()
+                bound.update(params[:len(node.args) - 1])
+                bound.update(kw.arg for kw in node.keywords if kw.arg)
+            return arg_vals[0]
+
+        # tracing consumer: every function-valued argument is traced;
+        # the wrapped callable still references the same functions
+        # (jit(f) ~ f), so the result carries them forward.
+        consumer = is_tracing_consumer(name)
+        if not consumer and isinstance(node.func, ast.Call):
+            # partial(jax.jit, ...)(f) / jax.jit(f)(args) chains
+            inner = astutil.call_name(node.func)
+            if inner and inner.rsplit(".", 1)[-1] == "partial" \
+                    and node.func.args:
+                consumer = is_tracing_consumer(
+                    astutil.dotted(node.func.args[0]))
+        if not consumer:
+            fval = self._eval(node.func, scope, mod) \
+                if not isinstance(node.func, (ast.Name, ast.Attribute)) \
+                else self._eval(node.func, scope, mod)
+            callee_funcs = fval.funcs
+        else:
+            callee_funcs = frozenset()
+        if consumer:
+            hit = AVal()
+            for v in arg_vals + [v for _, v in kw_vals]:
+                fs = v.all_funcs()
+                if fs:
+                    self._consumer_traced |= fs
+                    hit = merge(hit, AVal(funcs=fs))
+            if arg_vals:
+                for fidx in arg_vals[0].all_funcs():
+                    self._apply_jit_statics(fidx, node.keywords)
+            return hit
+
+        # resolved call: record edges + argument flow, return the
+        # callee's summary (builder products survive the call)
+        result = AVal()
+        for fidx in callee_funcs:
+            edges = self._call_edges.setdefault(id(node), set())
+            edges.add(fidx)
+            self._bind_args(fidx, node, arg_vals, kw_vals)
+            result = merge(result,
+                           self._summaries.get(fidx, AVal()))
+        return result
+
+    def _bind_args(self, fidx: int, node: ast.Call,
+                   arg_vals: List[AVal],
+                   kw_vals: List[Tuple[Optional[str], AVal]]) -> None:
+        info = self.funcs[fidx]
+        params = info.positional_params()
+        for i, v in enumerate(arg_vals):
+            if v.is_empty() or i >= len(params):
+                continue
+            key = (fidx, params[i])
+            self._param_vals[key] = merge(
+                self._param_vals.get(key, AVal()), v)
+        a = info.node.args
+        kw_ok = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        for kwname, v in kw_vals:
+            if kwname is None or v.is_empty() or kwname not in kw_ok:
+                continue
+            key = (fidx, kwname)
+            self._param_vals[key] = merge(
+                self._param_vals.get(key, AVal()), v)
+
+    def _apply_jit_statics(self, fidx: int,
+                           keywords: List[ast.keyword]) -> None:
+        """Record params of ``fidx`` named by ``static_argnums`` /
+        ``static_argnames`` keywords of a jit call or decorator."""
+        params = self.funcs[fidx].positional_params()
+        out = self._static_params.setdefault(fidx, set())
+        for kw in keywords:
+            if kw.arg not in ("static_argnums", "static_argnames"):
+                continue
+            vals = (kw.value.elts
+                    if isinstance(kw.value, (ast.Tuple, ast.List))
+                    else [kw.value])
+            for v in vals:
+                if not isinstance(v, ast.Constant):
+                    continue
+                if isinstance(v.value, str):
+                    out.add(v.value)
+                elif isinstance(v.value, int) \
+                        and 0 <= v.value < len(params):
+                    out.add(params[v.value])
+
+    def _check_decorators(self, info: FuncInfo, scope: _Scope,
+                          mod: astutil.Module) -> None:
+        for dec in info.node.decorator_list:
+            name = astutil.dotted(dec)
+            if is_tracing_consumer(name):
+                self._decorator_traced.add(info.index)
+                continue
+            if isinstance(dec, ast.Call):
+                cname = astutil.call_name(dec)
+                if is_tracing_consumer(cname):
+                    self._decorator_traced.add(info.index)
+                    self._apply_jit_statics(info.index, dec.keywords)
+                    continue
+                if cname and cname.rsplit(".", 1)[-1] == "partial" \
+                        and dec.args:
+                    if is_tracing_consumer(astutil.dotted(dec.args[0])):
+                        self._decorator_traced.add(info.index)
+                        self._apply_jit_statics(info.index,
+                                                dec.keywords)
+                        continue
+                # decorator factory: the function flows into the call
+                # it returns — treat as argument flow if resolvable
+                self._eval(dec, scope, mod)
+
+    # -- traced closure + taint -----------------------------------------
+
+    def _close_traced(self) -> None:
+        roots = set(self._decorator_traced) | set(self._consumer_traced)
+        for info in self.funcs:
+            if info.node.name.startswith("make_"):
+                roots |= self._summaries.get(info.index,
+                                             AVal()).all_funcs()
+        self.traced = set(roots)
+        # taint seeds: root-traced functions follow the repo contract —
+        # every positional parameter is a traced value, minus params
+        # proven static (partial-bound / static_argnums)
+        for idx in self.traced:
+            self._taint_seeds[idx] = self._seed_params(idx)
+        # nesting closure: anything defined inside a traced fn is traced
+        changed = True
+        while changed:
+            changed = False
+            for info in self.funcs:
+                if info.index in self.traced:
+                    continue
+                p = info.parent
+                while p is not None:
+                    if p in self.traced:
+                        self.traced.add(info.index)
+                        self._taint_seeds[info.index] = \
+                            self._seed_params(info.index)
+                        changed = True
+                        break
+                    p = self.funcs[p].parent
+        # call-graph closure happens inside the taint fixpoint: a
+        # callee becomes traced exactly when a traced caller reaches it,
+        # and its params are tainted only where tainted args flow in.
+
+    def _seed_params(self, idx: int) -> Set[str]:
+        drop = self._static_params.get(idx, set())
+        return {p for p in self.funcs[idx].positional_params()
+                if p not in drop}
+
+    def _callsites(self, info: FuncInfo) -> List[Tuple[ast.Call, int]]:
+        out = []
+        for node in astutil.own_scope_nodes(info.node):
+            if isinstance(node, ast.Call):
+                for fidx in self._call_edges.get(id(node), ()):
+                    out.append((node, fidx))
+        return out
+
+    def _compute_taints(self) -> None:
+        worklist = list(self.traced)
+        guard = 0
+        while worklist and guard < 10000:
+            guard += 1
+            idx = worklist.pop()
+            info = self.funcs[idx]
+            seeds = set(self._taint_seeds.get(idx, set()))
+            # inherit the enclosing traced chain's taint (closures read
+            # traced values of the scope they were defined in)
+            p = info.parent
+            while p is not None:
+                seeds |= self._taints.get(p, set())
+                p = self.funcs[p].parent
+            taint = self._local_taint(info, seeds)
+            if taint == self._taints.get(idx):
+                continue
+            self._taints[idx] = taint
+            # re-run functions nested inside (their inherited taint
+            # may have grown) and propagate into callees
+            for sub in self.funcs:
+                if sub.parent == idx and sub.index in self.traced:
+                    worklist.append(sub.index)
+            for call, fidx in self._callsites(info):
+                callee = self.funcs[fidx]
+                params = callee.positional_params()
+                grew = False
+                tgt = self._taint_seeds.setdefault(fidx, set())
+                for i, a in enumerate(call.args):
+                    if i < len(params) and params[i] not in tgt \
+                            and astutil.touches(a, taint):
+                        tgt.add(params[i])
+                        grew = True
+                for kw in call.keywords:
+                    if kw.arg and kw.arg not in tgt \
+                            and astutil.touches(kw.value, taint):
+                        tgt.add(kw.arg)
+                        grew = True
+                if fidx not in self.traced:
+                    self.traced.add(fidx)
+                    worklist.append(fidx)
+                elif grew:
+                    worklist.append(fidx)
+
+    def _local_taint(self, info: FuncInfo,
+                     seeds: Set[str]) -> Set[str]:
+        """Def-use closure of ``seeds`` over ``info``'s own scope."""
+        taint = set(seeds)
+        for _ in range(8):
+            before = len(taint)
+            for node in astutil.own_scope_nodes(info.node):
+                if isinstance(node, ast.Assign):
+                    if self._value_taints(node.value, taint):
+                        for t in node.targets:
+                            self._taint_target(t, taint)
+                elif isinstance(node, ast.AnnAssign):
+                    if node.value is not None \
+                            and self._value_taints(node.value, taint):
+                        self._taint_target(node.target, taint)
+                elif isinstance(node, ast.AugAssign):
+                    if self._value_taints(node.value, taint):
+                        self._taint_target(node.target, taint)
+                elif isinstance(node, ast.NamedExpr):
+                    if self._value_taints(node.value, taint):
+                        self._taint_target(node.target, taint)
+                elif isinstance(node, (ast.For, ast.AsyncFor)):
+                    self._taint_loop_target(node.iter, node.target,
+                                            taint)
+                elif isinstance(node, ast.comprehension):
+                    self._taint_loop_target(node.iter, node.target,
+                                            taint)
+                elif isinstance(node, (ast.With, ast.AsyncWith)):
+                    for item in node.items:
+                        if item.optional_vars is not None \
+                                and astutil.touches(item.context_expr,
+                                                    taint):
+                            self._taint_target(item.optional_vars,
+                                               taint)
+            if len(taint) == before:
+                break
+        return taint
+
+    def _value_taints(self, value: ast.expr, taint: Set[str]) -> bool:
+        """Whether an assigned value carries taint.  A comprehension's
+        result is tainted by what flows into its element — its loop
+        targets get the :meth:`_taint_loop_target` semantics (dict
+        iteration yields static keys), not blanket iter-taint; filter
+        clauses select but do not flow into the result."""
+        if isinstance(value, (ast.ListComp, ast.SetComp, ast.DictComp,
+                              ast.GeneratorExp)):
+            inner = set(taint)
+            for gen in value.generators:
+                self._taint_loop_target(gen.iter, gen.target, inner)
+            parts = ([value.key, value.value]
+                     if isinstance(value, ast.DictComp)
+                     else [value.elt])
+            return any(astutil.touches(p, inner) for p in parts)
+        return astutil.touches(value, taint)
+
+    def _taint_loop_target(self, it: ast.expr, target: ast.expr,
+                           taint: Set[str]) -> None:
+        """Loop-target taint with pytree-dict semantics: traced
+        containers in this codebase are dicts keyed by static tag
+        strings, so *direct* iteration (``for t in cache``) yields
+        static keys and does not taint the target.  Traced values are
+        reached via ``.values()`` (taints the whole target),
+        ``.items()`` (taints the value half of a 2-tuple target), or
+        subscripting inside the body (handled by the assignment
+        rules)."""
+        if isinstance(it, ast.Call) and isinstance(it.func,
+                                                   ast.Attribute):
+            if not astutil.touches(it.func.value, taint):
+                return
+            if it.func.attr == "values":
+                self._taint_target(target, taint)
+            elif it.func.attr == "items":
+                if isinstance(target, ast.Tuple) \
+                        and len(target.elts) == 2:
+                    self._taint_target(target.elts[1], taint)
+                else:
+                    self._taint_target(target, taint)
+            return
+        if isinstance(it, ast.Call):
+            name = astutil.dotted(it.func)
+            if name == "zip":
+                elts = (target.elts if isinstance(target, ast.Tuple)
+                        and len(target.elts) == len(it.args)
+                        else None)
+                for i, a in enumerate(it.args):
+                    if astutil.touches(a, taint):
+                        self._taint_target(
+                            elts[i] if elts else target, taint)
+                return
+        # a display iterates its elements — unambiguously values
+        if isinstance(it, (ast.Tuple, ast.List)) \
+                and astutil.touches(it, taint):
+            self._taint_target(target, taint)
+
+    def _taint_target(self, target: ast.expr, taint: Set[str]) -> None:
+        if isinstance(target, ast.Name):
+            taint.add(target.id)
+        elif isinstance(target, ast.Starred):
+            self._taint_target(target.value, taint)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._taint_target(e, taint)
+        elif isinstance(target, ast.Subscript):
+            # a container holding a traced value is itself traced data
+            self._taint_target(target.value, taint)
+
+    # -- public queries --------------------------------------------------
+
+    def is_traced(self, fn: ast.FunctionDef) -> bool:
+        idx = self._by_node.get(id(fn))
+        return idx is not None and idx in self.traced
+
+    def traced_functions(self, mod: astutil.Module
+                         ) -> List[ast.FunctionDef]:
+        return [f for f in mod.functions() if self.is_traced(f)]
+
+    def fallback_functions(self, mod: astutil.Module
+                           ) -> List[ast.FunctionDef]:
+        """Builder-idiom candidates the lattice could not prove traced:
+        inner defs of ``make_*`` builders whose flow to a consumer is
+        dynamic (``getattr``, computed dispatch, ...).  Analyzed at
+        NOTE severity — a human should look, the tool cannot prove."""
+        out = []
+        for fn in mod.functions():
+            if self.is_traced(fn):
+                continue
+            parent = mod.parent(fn)
+            if isinstance(parent, ast.FunctionDef) \
+                    and parent.name.startswith("make_"):
+                out.append(fn)
+        return out
+
+    def tainted_names(self, fn: ast.FunctionDef) -> Set[str]:
+        """Traced-value names within ``fn`` (positional params of the
+        traced chain plus everything def-use reachable from them).  For
+        a fallback (NOTE) function, computes the same closure from its
+        positional params on the fly."""
+        idx = self._by_node.get(id(fn))
+        if idx is None:
+            return set()
+        got = self._taints.get(idx)
+        if got is not None:
+            return set(got)
+        info = self.funcs[idx]
+        seeds = set(info.positional_params())
+        p = info.parent
+        while p is not None:
+            seeds |= self._taints.get(p, set())
+            seeds |= self._taint_seeds.get(p, set())
+            p = self.funcs[p].parent
+        return self._local_taint(info, seeds)
+
+    def eval_in(self, scope_node: Optional[ast.FunctionDef],
+                mod: astutil.Module, expr: ast.expr) -> AVal:
+        """Abstract value of ``expr`` as seen from inside
+        ``scope_node`` (or module scope when None)."""
+        scope: Optional[_Scope] = None
+        if scope_node is not None:
+            idx = self._by_node.get(id(scope_node))
+            if idx is not None:
+                scope = self._fn_scopes.get(idx)
+        if scope is None:
+            scope = self._mod_scopes.get(mod.path)
+        if scope is None:
+            return AVal()
+        return self._eval(expr, scope, mod)
+
+    def resolve_functions(self, scope_node: Optional[ast.FunctionDef],
+                          mod: astutil.Module,
+                          expr: ast.expr) -> List[FuncInfo]:
+        """Function definitions an expression may reference, resolved
+        through the dataflow lattice (same-module candidates first)."""
+        val = self.eval_in(scope_node, mod, expr)
+        infos = [self.funcs[i] for i in sorted(val.all_funcs())]
+        infos.sort(key=lambda fi: (fi.module.path != mod.path,
+                                   fi.index))
+        return infos

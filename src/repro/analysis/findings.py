@@ -29,6 +29,14 @@ RULES: Dict[str, tuple] = {}
 
 
 def register_rule(rule_id: str, severity: str, description: str) -> str:
+    """Register a rule id; ids are claimed once, at import time.  A
+    duplicate registration is a programming error in the analyzer
+    itself (two rules would share fingerprints and ``--select``
+    behavior), so it raises instead of silently overwriting."""
+    if rule_id in RULES:
+        raise ValueError(
+            f"rule id {rule_id!r} registered twice "
+            f"(existing: {RULES[rule_id][1]!r}, new: {description!r})")
     RULES[rule_id] = (severity, description)
     return rule_id
 
@@ -81,6 +89,55 @@ def sort_findings(findings: Iterable[Finding]) -> List[Finding]:
     return sorted(findings,
                   key=lambda f: (SEVERITY_ORDER.get(f.severity, 3),
                                  _norm_path(f.path), f.line, f.rule))
+
+
+def to_sarif(findings: Iterable[Finding]) -> dict:
+    """SARIF 2.1.0 document for GitHub code-scanning upload.
+
+    Severities map 1:1 (SARIF levels are ``error``/``warning``/
+    ``note`` too).  The per-result partial fingerprint is the same
+    line-independent fingerprint the baseline uses, so code-scanning
+    alert identity matches baseline identity.
+    """
+    results = []
+    used_rules = set()
+    for f in sort_findings(findings):
+        used_rules.add(f.rule)
+        results.append({
+            "ruleId": f.rule,
+            "level": f.severity if f.severity in SEVERITY_ORDER
+            else "warning",
+            "message": {"text": f"{f.symbol}: {f.message}"},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {
+                        "uri": _norm_path(f.path),
+                        "uriBaseId": "SRCROOT"},
+                    "region": {"startLine": max(f.line, 1),
+                               "startColumn": max(f.col, 1)},
+                },
+            }],
+            "partialFingerprints": {
+                "reproAnalysis/v1": f.fingerprint()},
+        })
+    rules = [{
+        "id": rid,
+        "shortDescription": {"text": RULES[rid][1]},
+        "defaultConfiguration": {"level": RULES[rid][0]},
+    } for rid in sorted(used_rules) if rid in RULES]
+    return {
+        "$schema": "https://json.schemastore.org/sarif-2.1.0.json",
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "repro.analysis",
+                "informationUri":
+                    "https://github.com/wtacrs/repro",
+                "rules": rules,
+            }},
+            "results": results,
+        }],
+    }
 
 
 class Baseline:

@@ -2,20 +2,31 @@
 
 These are AST lints specialized to this codebase's conventions:
 
-  * **Traced scopes** are the functions jit actually traces — inner
-    functions returned by ``make_*`` builders (the step-builder idiom),
-    functions decorated with ``jax.jit``, bodies handed to
-    ``jax.lax.scan`` / ``fori_loop`` / ``while_loop`` / ``shard_map``,
-    Pallas kernel bodies, and anything nested inside those.  Static
-    configuration enters traced scopes as *keyword-only* parameters or
-    closure constants, so positional parameters are treated as traced
-    values.
+  * **Traced scopes** are the functions jit actually traces.  They are
+    discovered by the whole-program dataflow engine
+    (:class:`repro.analysis.dataflow.Program`): ``@jit``-style
+    decorators, functions whose references *flow* into a tracing
+    consumer (``jit`` / ``lax.scan`` / ``pallas_call`` / ... — through
+    assignments, dict/tuple packing, ``functools.partial`` and call
+    returns), everything reachable in a ``make_*`` builder's return
+    value (the step-builder idiom), functions nested inside traced
+    scopes, and callees of traced functions.  Static configuration
+    enters traced scopes as *keyword-only* parameters or closure
+    constants, so positional parameters seed the traced-value taint;
+    the engine then closes taint over each function's def-use chains.
+
+    Inner defs of ``make_*`` builders whose flow the lattice cannot
+    resolve (``getattr`` dispatch, attribute stores on foreign objects)
+    are still scanned — at NOTE severity, flagged as heuristic.
 
   * **Tick paths** are methods of any class that defines a ``tick``
     method (the serving scheduler shape): host-side loops where an
     *implicit* device→host transfer (``np.asarray`` / ``int`` / ...
     on a step function's result) hides a blocking sync that should be
-    one explicit ``jax.device_get`` per tick.
+    one explicit ``jax.device_get`` per tick.  Step functions are
+    recognized by dataflow resolution (an attribute holding a traced
+    builder product, however it is named) with the ``*_fn`` naming
+    convention kept as a fallback.
 
 Rules:
 
@@ -23,21 +34,23 @@ Rules:
          ``np.asarray``) on a traced value inside a jitted scope
   JL002  implicit device→host transfer on a step-fn result in a
          scheduler tick path (use one explicit ``jax.device_get``)
-  JL003  mutable closure capture in a jit-traced builder product
+  JL003  mutable closure capture in a jit-traced function
          (recompile hazard / silently stale state)
   JL004  PRNG key consumed more than once without ``fold_in``/``split``
   JL005  Python branch on a traced value (trace-time freeze or
          ConcretizationTypeError)
   JL006  ``hash()`` feeding PRNG key derivation (PYTHONHASHSEED makes
          streams differ across processes; use zlib.crc32)
+  JL007  traced value escapes to host state (appended/stored into a
+         container that outlives the traced scope)
 """
 from __future__ import annotations
 
 import ast
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
-from repro.analysis import astutil
-from repro.analysis.findings import (ERROR, WARNING, Finding,
+from repro.analysis import astutil, dataflow
+from repro.analysis.findings import (ERROR, NOTE, WARNING, Finding,
                                      register_rule)
 
 JL001 = register_rule("JL001", ERROR,
@@ -45,20 +58,19 @@ JL001 = register_rule("JL001", ERROR,
 JL002 = register_rule("JL002", WARNING,
                       "implicit device->host transfer in tick path")
 JL003 = register_rule("JL003", WARNING,
-                      "mutable closure capture in jitted builder")
+                      "mutable closure capture in jitted scope")
 JL004 = register_rule("JL004", ERROR,
                       "PRNG key consumed more than once")
 JL005 = register_rule("JL005", WARNING,
                       "Python branch on traced value")
 JL006 = register_rule("JL006", ERROR,
                       "hash() feeds PRNG key derivation")
+JL007 = register_rule("JL007", WARNING,
+                      "traced value escapes to host state")
 
 _SYNC_BUILTINS = ("float", "int", "bool")
 _SYNC_CALLS = ("np.asarray", "np.array", "numpy.asarray", "numpy.array")
 _SYNC_METHODS = ("item", "tolist", "to_py")
-_TRACING_CONSUMERS = ("jax.lax.scan", "jax.lax.fori_loop",
-                      "jax.lax.while_loop", "jax.lax.cond",
-                      "shard_map", "jax.jit", "pl.pallas_call")
 _KEY_MAKERS = ("jax.random.PRNGKey", "jax.random.key",
                "jax.random.fold_in", "jax.random.wrap_key_data",
                "random.PRNGKey", "random.fold_in")
@@ -68,9 +80,7 @@ _KEY_CONSUMERS = frozenset((
     "laplace", "beta", "gamma", "poisson", "dirichlet", "shuffle"))
 _KEY_PARAM_PREFIXES = ("key", "rng", "prng")
 
-
-def _fn_name(node: ast.AST) -> Optional[str]:
-    return node.name if isinstance(node, ast.FunctionDef) else None
+_HEURISTIC_TAG = " [heuristic: dynamic flow unresolved]"
 
 
 def _is_jit_decorated(fn: ast.FunctionDef) -> bool:
@@ -97,8 +107,14 @@ def _returned_names(fn: ast.FunctionDef) -> Set[str]:
     return out
 
 
-def traced_functions(mod: astutil.Module) -> List[ast.FunctionDef]:
-    """Functions whose bodies run under a jax trace (see module doc)."""
+def traced_functions_heuristic(
+        mod: astutil.Module) -> List[ast.FunctionDef]:
+    """The pre-dataflow traced-scope heuristic, kept verbatim: jit
+    decorators, ``make_*`` inner defs returned *by name*, and bodies
+    handed to scan/fori/while/shard_map/pallas_call *by name*.  It is
+    the regression anchor for the dataflow engine — everything it finds
+    the engine must also find (see tests/test_dataflow.py) — and is no
+    longer used by the checks themselves."""
     roots: Set[int] = set()
     fns = mod.functions()
 
@@ -118,14 +134,12 @@ def traced_functions(mod: astutil.Module) -> List[ast.FunctionDef]:
         name = astutil.call_name(node)
         if name is None:
             continue
-        if not any(name == c or name.endswith("." + c.split(".")[-1])
-                   and c.split(".")[-1] in ("scan", "fori_loop",
-                                            "while_loop", "shard_map",
-                                            "pallas_call")
-                   for c in _TRACING_CONSUMERS):
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf not in ("scan", "fori_loop", "while_loop", "shard_map",
+                        "pallas_call"):
             continue
         cands = list(node.args[:2])
-        for a in node.args[:1] if name.endswith("pallas_call") else cands:
+        for a in node.args[:1] if leaf == "pallas_call" else cands:
             target = a
             if (isinstance(a, ast.Call)
                     and (astutil.call_name(a) or "").endswith("partial")
@@ -148,108 +162,68 @@ def traced_functions(mod: astutil.Module) -> List[ast.FunctionDef]:
     return traced
 
 
-def _traced_params(fn: ast.FunctionDef) -> Set[str]:
-    """Positional params (kw-only params are the static idiom)."""
-    names = {a.arg for a in fn.args.posonlyargs + fn.args.args}
-    names.discard("self")
-    return names
-
-
-def _chain_params(mod: astutil.Module, fn: ast.FunctionDef,
-                  traced_ids: Set[int]) -> Set[str]:
-    """Traced params of ``fn`` plus every enclosing traced function."""
-    out: Set[str] = set()
-    cur: Optional[ast.AST] = fn
-    while cur is not None:
-        if isinstance(cur, ast.FunctionDef) and id(cur) in traced_ids:
-            out |= _traced_params(cur)
-        cur = mod.parent(cur)
-    return out
-
-
-def _touches(node: ast.AST, params: Set[str]) -> bool:
-    """Whether evaluating ``node`` reads runtime data of ``params``
-    (access through .shape/.ndim/... and len() is static)."""
-    if isinstance(node, ast.Name):
-        return node.id in params
-    if isinstance(node, ast.Attribute):
-        if node.attr in astutil.STATIC_ATTRS:
-            return False
-        return _touches(node.value, params)
-    if isinstance(node, ast.Call):
-        name = astutil.call_name(node)
-        if name in ("len", "isinstance", "type"):
-            return False
-        return any(_touches(a, params) for a in node.args) or any(
-            _touches(kw.value, params) for kw in node.keywords)
-    if isinstance(node, ast.Compare):
-        ops_in = [isinstance(op, (ast.In, ast.NotIn)) for op in node.ops]
-        if any(ops_in):
-            # membership on a traced container is a structure test
-            # ("budget_stats" in state) — only the element side counts
-            sides = [node.left] + list(node.comparators)
-            checked = [sides[0]] + [
-                c for c, is_in in zip(sides[1:], ops_in) if not is_in]
-            return any(_touches(s, params) for s in checked)
-    for child in ast.iter_child_nodes(node):
-        if _touches(child, params):
-            return True
-    return False
-
-
 # ---------------------------------------------------------------------------
 # JL001 / JL005 — inside traced scopes
 # ---------------------------------------------------------------------------
 
-def _check_traced_scopes(mod: astutil.Module) -> List[Finding]:
+def _check_traced_scopes(mod: astutil.Module,
+                         program: dataflow.Program) -> List[Finding]:
     out: List[Finding] = []
-    traced = traced_functions(mod)
-    traced_ids = {id(f) for f in traced}
-    for fn in traced:
-        params = _chain_params(mod, fn, traced_ids)
-        for node in ast.iter_child_nodes(fn):
-            out.extend(_scan_traced(mod, fn, node, params, traced_ids))
+    for fn in program.traced_functions(mod):
+        params = program.tainted_names(fn)
+        out.extend(_scan_traced(mod, fn, params, severity=""))
+    # lattice-unresolved builder products: scan anyway, demoted to NOTE
+    for fn in program.fallback_functions(mod):
+        params = program.tainted_names(fn)
+        out.extend(_scan_traced(mod, fn, params, severity=NOTE))
     return out
 
 
-def _scan_traced(mod, fn, node, params, traced_ids) -> List[Finding]:
+def _scan_traced(mod: astutil.Module, fn: ast.FunctionDef,
+                 params: Set[str], severity: str) -> List[Finding]:
     out: List[Finding] = []
-    if isinstance(node, ast.FunctionDef):
-        return out  # nested defs are visited as their own traced fns
-    if isinstance(node, ast.Call):
-        name = astutil.call_name(node)
-        flagged = None
-        if (isinstance(node.func, ast.Name)
-                and node.func.id in _SYNC_BUILTINS and node.args
-                and _touches(node.args[0], params)):
-            flagged = f"{node.func.id}()"
-        elif name in _SYNC_CALLS and node.args \
-                and _touches(node.args[0], params):
-            flagged = name
-        elif (isinstance(node.func, ast.Attribute)
-              and node.func.attr in _SYNC_METHODS
-              and _touches(node.func.value, params)):
-            flagged = f".{node.func.attr}()"
-        if flagged:
+    tag = _HEURISTIC_TAG if severity == NOTE else ""
+    for node in astutil.own_scope_nodes(fn):
+        if isinstance(node, ast.Call):
+            flagged = _sync_call(node, params)
+            if flagged:
+                out.append(Finding(
+                    rule="JL001", path=mod.path, line=node.lineno,
+                    col=node.col_offset + 1,
+                    symbol=mod.symbol_for(node), severity=severity,
+                    message=f"{flagged} on traced value inside a jitted "
+                            f"scope forces a host sync (or fails to "
+                            f"trace); keep it on-device or move it to "
+                            f"the host driver{tag}"))
+        if isinstance(node, (ast.If, ast.While)) \
+                and astutil.touches(node.test, params):
+            kind = "while" if isinstance(node, ast.While) else "if"
             out.append(Finding(
-                rule="JL001", path=mod.path, line=node.lineno,
+                rule="JL005", path=mod.path, line=node.lineno,
                 col=node.col_offset + 1, symbol=mod.symbol_for(node),
-                message=f"{flagged} on traced value inside a jitted "
-                        f"scope forces a host sync (or fails to trace); "
-                        f"keep it on-device or move it to the host "
-                        f"driver"))
-    if isinstance(node, (ast.If, ast.While)) \
-            and _touches(node.test, params):
-        kind = "while" if isinstance(node, ast.While) else "if"
-        out.append(Finding(
-            rule="JL005", path=mod.path, line=node.lineno,
-            col=node.col_offset + 1, symbol=mod.symbol_for(node),
-            message=f"Python `{kind}` on a traced value freezes the "
-                    f"branch at trace time (or raises under jit); use "
-                    f"jnp.where / lax.cond / lax.select"))
-    for child in ast.iter_child_nodes(node):
-        out.extend(_scan_traced(mod, fn, child, params, traced_ids))
+                severity=severity,
+                message=f"Python `{kind}` on a traced value freezes the "
+                        f"branch at trace time (or raises under jit); "
+                        f"use jnp.where / lax.cond / lax.select{tag}"))
     return out
+
+
+def _sync_call(node: ast.Call, params: Set[str]) -> Optional[str]:
+    """The sync-ing callable's rendering, if this call host-syncs a
+    traced value."""
+    name = astutil.call_name(node)
+    if (isinstance(node.func, ast.Name)
+            and node.func.id in _SYNC_BUILTINS and node.args
+            and astutil.touches(node.args[0], params)):
+        return f"{node.func.id}()"
+    if name in _SYNC_CALLS and node.args \
+            and astutil.touches(node.args[0], params):
+        return name
+    if (isinstance(node.func, ast.Attribute)
+            and node.func.attr in _SYNC_METHODS
+            and astutil.touches(node.func.value, params)):
+        return f".{node.func.attr}()"
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -257,7 +231,8 @@ def _scan_traced(mod, fn, node, params, traced_ids) -> List[Finding]:
 # ---------------------------------------------------------------------------
 
 def _stepfn_call(node: ast.AST) -> bool:
-    """Calls of self._*fn / *_fn attributes — the cached jitted steps."""
+    """Calls of self._*fn / *_fn attributes — the cached jitted steps
+    by naming convention (fallback when dataflow cannot resolve)."""
     if not isinstance(node, ast.Call):
         return False
     fn = node.func
@@ -271,7 +246,24 @@ def _stepfn_call(node: ast.AST) -> bool:
     return False
 
 
-def _check_tick_paths(mod: astutil.Module) -> List[Finding]:
+def _resolved_step_call(node: ast.AST, mod: astutil.Module,
+                        method: ast.FunctionDef,
+                        program: dataflow.Program) -> bool:
+    """Dataflow resolution: does this call's callee reference a traced
+    function (a jitted builder product, however the attribute/variable
+    holding it is named)?"""
+    if not isinstance(node, ast.Call):
+        return False
+    for info in program.resolve_functions(method, mod, node.func):
+        if info.index in program.traced:
+            return True
+    if isinstance(node.func, ast.Call):
+        return _resolved_step_call(node.func, mod, method, program)
+    return False
+
+
+def _check_tick_paths(mod: astutil.Module,
+                      program: dataflow.Program) -> List[Finding]:
     out: List[Finding] = []
     for cls in ast.walk(mod.tree):
         if not isinstance(cls, ast.ClassDef):
@@ -280,12 +272,12 @@ def _check_tick_paths(mod: astutil.Module) -> List[Finding]:
         if not any(m.name == "tick" for m in methods):
             continue
         for m in methods:
-            out.extend(_scan_tick_method(mod, m))
+            out.extend(_scan_tick_method(mod, m, program))
     return out
 
 
-def _scan_tick_method(mod: astutil.Module,
-                      fn: ast.FunctionDef) -> List[Finding]:
+def _scan_tick_method(mod: astutil.Module, fn: ast.FunctionDef,
+                      program: dataflow.Program) -> List[Finding]:
     device: Set[str] = set()
     out: List[Finding] = []
 
@@ -299,24 +291,14 @@ def _scan_tick_method(mod: astutil.Module,
     def visit(node: ast.AST) -> None:
         if isinstance(node, ast.Assign):
             visit(node.value)
-            from_step = _stepfn_call(node.value)
+            from_step = (_stepfn_call(node.value)
+                         or _resolved_step_call(node.value, mod, fn,
+                                                program))
             for t in node.targets:
                 bind(t, from_step)
             return
         if isinstance(node, ast.Call):
-            name = astutil.call_name(node)
-            hit = None
-            if name in _SYNC_CALLS and node.args \
-                    and _touches(node.args[0], device):
-                hit = name
-            elif (isinstance(node.func, ast.Name)
-                  and node.func.id in _SYNC_BUILTINS and node.args
-                  and _touches(node.args[0], device)):
-                hit = f"{node.func.id}()"
-            elif (isinstance(node.func, ast.Attribute)
-                  and node.func.attr in _SYNC_METHODS
-                  and _touches(node.func.value, device)):
-                hit = f".{node.func.attr}()"
+            hit = _sync_call(node, device)
             if hit:
                 out.append(Finding(
                     rule="JL002", path=mod.path, line=node.lineno,
@@ -335,65 +317,113 @@ def _scan_tick_method(mod: astutil.Module,
 
 
 # ---------------------------------------------------------------------------
-# JL003 — mutable closure captures in make_* builder products
+# JL003 / JL007 — closure captures and host-state escapes
 # ---------------------------------------------------------------------------
 
 _MUTATORS = ("append", "extend", "add", "update", "setdefault", "pop",
              "insert", "remove", "clear")
+_ESCAPE_STORES = ("append", "extend", "add", "update", "setdefault",
+                  "insert")
 _MUTABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
                      ast.DictComp, ast.SetComp)
 
 
-def _check_builder_captures(mod: astutil.Module) -> List[Finding]:
+def _check_captures(mod: astutil.Module,
+                    program: dataflow.Program) -> List[Finding]:
     out: List[Finding] = []
-    for builder in mod.functions():
-        if not builder.name.startswith("make_"):
-            continue
-        returned = _returned_names(builder)
-        inners = [n for n in builder.body
-                  if isinstance(n, ast.FunctionDef)
-                  and n.name in returned]
-        if not inners:
-            continue
-        mutable = _mutable_bindings(builder)
-        for inner in inners:
-            local = _local_names(inner)
-            for node in ast.walk(inner):
-                if (isinstance(node, ast.Name)
-                        and isinstance(node.ctx, ast.Load)
-                        and node.id in mutable
-                        and node.id not in local):
-                    out.append(Finding(
-                        rule="JL003", path=mod.path, line=node.lineno,
-                        col=node.col_offset + 1,
-                        symbol=mod.symbol_for(node),
-                        message=f"jitted closure captures mutable "
-                                f"builder state {node.id!r} "
-                                f"({mutable[node.id]}); jit traces it "
-                                f"ONCE — later mutation is silently "
-                                f"ignored (or it breaks hashing as a "
-                                f"static arg); capture an immutable "
-                                f"snapshot (tuple/frozen dataclass)"))
-                    break  # one finding per (inner, name) pair is enough
+    for fn in program.traced_functions(mod):
+        out.extend(_scan_captures(mod, fn, program, severity=""))
+    for fn in program.fallback_functions(mod):
+        out.extend(_scan_captures(mod, fn, program, severity=NOTE))
     return out
 
 
-def _iter_own_scope(fn: ast.FunctionDef):
-    """Nodes of ``fn``'s own scope (nested function bodies excluded)."""
-    stack: List[ast.AST] = list(fn.body)
-    while stack:
-        node = stack.pop()
-        yield node
-        for child in ast.iter_child_nodes(node):
-            if not isinstance(child, (ast.FunctionDef,
-                                      ast.AsyncFunctionDef)):
-                stack.append(child)
+def _scan_captures(mod: astutil.Module, fn: ast.FunctionDef,
+                   program: dataflow.Program,
+                   severity: str) -> List[Finding]:
+    """JL007 (traced value stored into an outliving container) and
+    JL003 (mutable ancestor-scope capture read inside the traced fn).
+    A name JL007 already reported is not re-reported as JL003 — the
+    escape is the sharper diagnosis of the same capture."""
+    out: List[Finding] = []
+    tag = _HEURISTIC_TAG if severity == NOTE else ""
+    mutable = _ancestor_mutable_bindings(mod, fn)
+    local = _local_names(fn)
+    taint = program.tainted_names(fn)
+    escaped: Set[str] = set()
+
+    for node in astutil.own_scope_nodes(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if not (isinstance(f, ast.Attribute)
+                and f.attr in _ESCAPE_STORES):
+            continue
+        stored = list(node.args) + [kw.value for kw in node.keywords]
+        if not any(astutil.touches(a, taint) for a in stored):
+            continue
+        target = f.value
+        tgt_name: Optional[str] = None
+        if isinstance(target, ast.Name):
+            if target.id in local and target.id not in mutable:
+                continue  # fn-local scratch container: dies with trace
+            tgt_name = target.id
+        elif not (isinstance(target, ast.Attribute)
+                  and isinstance(target.value, ast.Name)
+                  and target.value.id == "self"):
+            continue
+        where = tgt_name or astutil.dotted(target) or "container"
+        out.append(Finding(
+            rule="JL007", path=mod.path, line=node.lineno,
+            col=node.col_offset + 1, symbol=mod.symbol_for(node),
+            severity=severity,
+            message=f".{f.attr}() stores a traced value into "
+                    f"{where!r}, host state that outlives the traced "
+                    f"scope: under jit it records one stale tracer at "
+                    f"trace time, not a value per step; return it from "
+                    f"the traced function instead{tag}"))
+        if tgt_name:
+            escaped.add(tgt_name)
+
+    for node in astutil.own_scope_nodes(fn):
+        if not (isinstance(node, ast.Name)
+                and isinstance(node.ctx, ast.Load)
+                and node.id in mutable
+                and node.id not in local
+                and node.id not in escaped):
+            continue
+        out.append(Finding(
+            rule="JL003", path=mod.path, line=node.lineno,
+            col=node.col_offset + 1, symbol=mod.symbol_for(node),
+            severity=severity,
+            message=f"jitted closure captures mutable state "
+                    f"{node.id!r} ({mutable[node.id]}); jit traces it "
+                    f"ONCE — later mutation is silently ignored (or it "
+                    f"breaks hashing as a static arg); capture an "
+                    f"immutable snapshot (tuple/frozen dataclass){tag}"))
+        escaped.add(node.id)  # one finding per (fn, name) pair
+    return out
 
 
-def _mutable_bindings(builder: ast.FunctionDef) -> Dict[str, str]:
-    """Builder-level names bound to mutable displays or mutated."""
+def _ancestor_mutable_bindings(mod: astutil.Module,
+                               fn: ast.FunctionDef) -> Dict[str, str]:
+    """Mutable bindings of every enclosing function scope (module-level
+    constants are deliberately out of scope: tables at import time are
+    the codebase's static-config idiom)."""
     out: Dict[str, str] = {}
-    for sub in _iter_own_scope(builder):
+    cur = mod.parent(fn)
+    while cur is not None:
+        if isinstance(cur, ast.FunctionDef):
+            for name, why in _mutable_bindings(cur).items():
+                out.setdefault(name, why)
+        cur = mod.parent(cur)
+    return out
+
+
+def _mutable_bindings(scope: ast.FunctionDef) -> Dict[str, str]:
+    """Scope-level names bound to mutable displays or mutated."""
+    out: Dict[str, str] = {}
+    for sub in astutil.own_scope_nodes(scope):
         if isinstance(sub, ast.Assign):
             for t in sub.targets:
                 if isinstance(t, ast.Name) and isinstance(
@@ -403,19 +433,22 @@ def _mutable_bindings(builder: ast.FunctionDef) -> Dict[str, str]:
                 and isinstance(sub.func, ast.Attribute)
                 and sub.func.attr in _MUTATORS
                 and isinstance(sub.func.value, ast.Name)):
-            out[sub.func.value.id] = "mutated in the builder"
+            out[sub.func.value.id] = "mutated in the enclosing scope"
         if isinstance(sub, ast.AugAssign) and isinstance(
                 sub.target, ast.Name):
-            out.setdefault(sub.target.id, "mutated in the builder")
+            out.setdefault(sub.target.id, "mutated in the enclosing scope")
     return out
 
 
 def _local_names(fn: ast.FunctionDef) -> Set[str]:
     names = {a.arg for a in fn.args.posonlyargs + fn.args.args
              + fn.args.kwonlyargs}
-    for node in ast.walk(fn):
+    for node in astutil.own_scope_nodes(fn):
         if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
             names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            names.add(node.name)
     return names
 
 
@@ -526,12 +559,16 @@ def _check_hash_keys(mod: astutil.Module) -> List[Finding]:
     return out
 
 
-def check(modules: Iterable[astutil.Module]) -> List[Finding]:
+def check(modules: Iterable[astutil.Module],
+          program: Optional[dataflow.Program] = None) -> List[Finding]:
+    mods = list(modules)
+    if program is None:
+        program = dataflow.Program.build(mods)
     out: List[Finding] = []
-    for mod in modules:
-        out.extend(_check_traced_scopes(mod))
-        out.extend(_check_tick_paths(mod))
-        out.extend(_check_builder_captures(mod))
+    for mod in mods:
+        out.extend(_check_traced_scopes(mod, program))
+        out.extend(_check_tick_paths(mod, program))
+        out.extend(_check_captures(mod, program))
         out.extend(_check_key_reuse(mod))
         out.extend(_check_hash_keys(mod))
     return out

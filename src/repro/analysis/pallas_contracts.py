@@ -30,6 +30,12 @@ Shape arithmetic is evaluated with the wrapper's parameter defaults;
 unknown dimensions (runtime shapes) assume 128 and the estimate is
 labeled as such.  The point is catching order-of-magnitude VMEM
 mistakes at review time, not byte-exact accounting.
+
+Kernel bodies are resolved through the dataflow engine
+(:mod:`repro.analysis.dataflow`): a kernel picked out of a dict of
+candidates, re-bound, or imported from a sibling module is still
+found; the legacy same-module by-name lookup remains as a fallback
+for flow the lattice cannot prove.
 """
 from __future__ import annotations
 
@@ -37,7 +43,7 @@ import ast
 import dataclasses
 from typing import Dict, Iterable, List, Optional, Tuple
 
-from repro.analysis import astutil
+from repro.analysis import astutil, dataflow
 from repro.analysis.findings import (ERROR, WARNING, Finding,
                                      register_rule)
 
@@ -80,6 +86,9 @@ class PallasCallInfo:
     in_specs: List[BlockSpecInfo]
     out_specs: List[BlockSpecInfo]
     scratch_shapes: List[ast.expr]
+    # module the resolved kernel body lives in (may differ from ``mod``
+    # when the dataflow engine resolves a cross-module kernel)
+    kernel_mod: Optional[astutil.Module] = None
 
     @property
     def where(self) -> str:
@@ -89,6 +98,7 @@ class PallasCallInfo:
 
 def _resolve_function(mod: astutil.Module,
                       node: ast.expr) -> Optional[ast.FunctionDef]:
+    """Legacy same-module by-name kernel lookup (fallback only)."""
     target = node
     if isinstance(node, ast.Call) and (
             astutil.call_name(node) or "").endswith("partial"):
@@ -100,6 +110,25 @@ def _resolve_function(mod: astutil.Module,
             if fn.name == target.id:
                 return fn
     return None
+
+
+def _resolve_kernel(mod: astutil.Module, node: ast.expr,
+                    wrapper: Optional[ast.FunctionDef],
+                    program: Optional[dataflow.Program]
+                    ) -> Tuple[Optional[ast.FunctionDef],
+                               Optional[astutil.Module]]:
+    """Kernel body for a ``pallas_call`` first argument: dataflow
+    resolution (handles re-binds, dict/tuple carriage, partial, and
+    cross-module imports), then the by-name fallback."""
+    if program is not None:
+        target = node
+        if isinstance(node, ast.Call) and (
+                astutil.call_name(node) or "").endswith("partial"):
+            target = node.args[0] if node.args else node
+        for fi in program.resolve_functions(wrapper, mod, target):
+            return fi.node, fi.module
+    fn = _resolve_function(mod, node)
+    return fn, (mod if fn is not None else None)
 
 
 def _blockspec(node: ast.expr) -> Optional[BlockSpecInfo]:
@@ -134,7 +163,9 @@ def _spec_list(node: Optional[ast.expr]) -> List[BlockSpecInfo]:
     return out
 
 
-def extract_pallas_calls(mod: astutil.Module) -> List[PallasCallInfo]:
+def extract_pallas_calls(mod: astutil.Module,
+                         program: Optional[dataflow.Program] = None
+                         ) -> List[PallasCallInfo]:
     out = []
     for node in ast.walk(mod.tree):
         if not isinstance(node, ast.Call):
@@ -166,14 +197,17 @@ def extract_pallas_calls(mod: astutil.Module) -> List[PallasCallInfo]:
         # resolve grid through a wrapper-local assignment
         if isinstance(grid, ast.Name) and wrapper is not None:
             grid = astutil.assignments(wrapper).get(grid.id, grid)
-        kernel = _resolve_function(mod, node.args[0]) if node.args else None
+        kernel, kmod = (_resolve_kernel(mod, node.args[0], wrapper,
+                                        program)
+                        if node.args else (None, None))
         out.append(PallasCallInfo(
             mod=mod, call=node, wrapper=wrapper, kernel=kernel,
             grid=grid, num_scalar_prefetch=npf,
             in_specs=_spec_list(in_specs),
             out_specs=_spec_list(out_specs),
             scratch_shapes=(scratch.elts if isinstance(
-                scratch, (ast.List, ast.Tuple)) else [])))
+                scratch, (ast.List, ast.Tuple)) else []),
+            kernel_mod=kmod))
     return out
 
 
@@ -349,7 +383,7 @@ def _check_kernel_matmuls(info: PallasCallInfo) -> List[Finding]:
     if info.kernel is None:
         return []
     out: List[Finding] = []
-    mod = info.mod
+    mod = info.kernel_mod or info.mod
     for node in ast.walk(info.kernel):
         if not isinstance(node, ast.Call):
             continue
@@ -399,7 +433,7 @@ def _check_dma_pairing(info: PallasCallInfo) -> List[Finding]:
     starts, waits = calls.get("start", 0), calls.get("wait", 0)
     if starts and waits:
         return []
-    mod = info.mod
+    mod = info.kernel_mod or info.mod
     missing = "wait" if starts else "start"
     present = "start" if starts else "wait"
     return [Finding(
@@ -465,13 +499,17 @@ def _check_ragged_guards(info: PallasCallInfo) -> List[Finding]:
 
 
 def check(modules: Iterable[astutil.Module],
-          vmem_budget: Optional[int] = None) -> List[Finding]:
+          vmem_budget: Optional[int] = None,
+          program: Optional[dataflow.Program] = None) -> List[Finding]:
     if vmem_budget is None:
         vmem_budget = DEFAULT_VMEM_BUDGET
+    mods = list(modules)
+    if program is None:
+        program = dataflow.Program.build(mods)
     out: List[Finding] = []
     seen_kernels = set()
-    for mod in modules:
-        for info in extract_pallas_calls(mod):
+    for mod in mods:
+        for info in extract_pallas_calls(mod, program):
             grid_len = (len(info.grid.elts)
                         if isinstance(info.grid, ast.Tuple) else None)
             out.extend(_check_specs(info, grid_len))
@@ -479,7 +517,8 @@ def check(modules: Iterable[astutil.Module],
             out.extend(_check_vmem(info, vmem_budget))
             out.extend(_check_ragged_guards(info))
             if info.kernel is not None:
-                key = (mod.path, info.kernel.name)
+                kmod = info.kernel_mod or mod
+                key = (kmod.path, info.kernel.name)
                 if key not in seen_kernels:
                     seen_kernels.add(key)
                     out.extend(_check_kernel_matmuls(info))

@@ -17,10 +17,22 @@ uses — zero FLOPs, a few seconds for all architectures).
          cache column to read — the rule can never be honored
   PT004  shadowed rule: every tag it matches is claimed by an earlier
          rule (first-match-wins makes it unreachable)
+  PT008  schedule-termination proof: a ``BudgetSchedule`` /
+         budget-controller literal whose trajectory — abstractly
+         interpreted with the exact plateau-quantization arithmetic of
+         ``BudgetSchedule.budget_at`` — provably never reaches its
+         configured end budget within the module's declared step
+         horizon (``RunSpec(steps=N)`` or a ``STEPS``-style constant):
+         a linear anneal whose ``end_step`` overshoots the horizon, a
+         ``warmup_exact`` that never leaves warmup, a degenerate
+         ``end_step <= begin_step``, a ``FixedSchedule`` whose clamp
+         band excludes the schedule's end, or a grid controller whose
+         far plateau is unreachable in ``warmup + levels - 1`` moves
 
 Only string-literal patterns are checked; dynamically built patterns
 are skipped.  The tag universe can be injected (tests) or computed
-live from ``repro.configs`` (default).
+live from ``repro.configs`` (default).  PT008 is pure AST arithmetic
+and needs neither the universe nor an import of the analyzed code.
 """
 from __future__ import annotations
 
@@ -37,6 +49,8 @@ PT001 = register_rule("PT001", ERROR, "dead tag-glob rule")
 PT002 = register_rule("PT002", NOTE, "uncovered sampled-dense tags")
 PT003 = register_rule("PT003", ERROR, "CACHED_GRAD rule on rows-dim tag")
 PT004 = register_rule("PT004", WARNING, "rule shadowed by earlier rules")
+PT008 = register_rule("PT008", ERROR,
+                      "schedule never reaches end budget in horizon")
 
 # {arch name: {tag: "token" | "rows"}}
 TagUniverse = Dict[str, Dict[str, str]]
@@ -306,13 +320,293 @@ def check_policies(policies: Iterable[PolicyLit],
     return out
 
 
+# ---------------------------------------------------------------------------
+# PT008 — schedule-termination proofs (pure AST abstract interpretation)
+# ---------------------------------------------------------------------------
+
+# BudgetSchedule dataclass defaults (mirrored from repro.core.policy;
+# the analyzer never imports the analyzed code).
+_SCHED_DEFAULTS = {"start": 1.0, "end": 0.3, "begin_step": 0.0,
+                   "end_step": 0.0, "stages": 4.0}
+_SCHED_POS = {
+    "linear": ("start", "end", "begin_step", "end_step", "stages"),
+    "warmup_exact": ("begin_step", "end"),
+    "constant": ("end",),
+}
+# _GridController defaults (repro.core.controller); FixedSchedule
+# widens b_min to 0.01.
+_CTRL_LEAVES = ("ESSProportional", "ConditionRate")
+_CTRL_DEFAULTS = {"levels": 7.0, "warmup": 3.0}
+_FIXED_DEFAULTS = {"b_min": 0.01, "b_max": 1.0}
+_HORIZON_NAMES = ("steps", "num_steps", "total_steps", "train_steps",
+                  "horizon", "max_steps")
+_EPS = 1e-9
+
+
+def _enclosing_fn(mod: astutil.Module,
+                  node: ast.AST) -> Optional[ast.FunctionDef]:
+    cur = mod.parent(node)
+    while cur is not None:
+        if isinstance(cur, ast.FunctionDef):
+            return cur
+        cur = mod.parent(cur)
+    return None
+
+
+def _const_num(mod: astutil.Module, node: ast.expr,
+               scope: Optional[ast.AST]) -> Optional[float]:
+    node = _resolve_name(mod, node, scope)
+    if isinstance(node, ast.Constant) and isinstance(
+            node.value, (int, float)) and not isinstance(
+            node.value, bool):
+        return float(node.value)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _const_num(mod, node.operand, scope)
+        return None if v is None else -v
+    return None
+
+
+def _call_fields(mod: astutil.Module, call: ast.Call,
+                 scope: Optional[ast.AST], posnames: Sequence[str],
+                 defaults: Dict[str, float]
+                 ) -> Optional[Dict[str, float]]:
+    """Numeric fields of a constructor-style call; None when any
+    supplied argument is not a resolvable literal (dynamic — skip)."""
+    fields = dict(defaults)
+    for i, arg in enumerate(call.args):
+        if i >= len(posnames):
+            return None
+        v = _const_num(mod, arg, scope)
+        if v is None:
+            return None
+        fields[posnames[i]] = v
+    for kw in call.keywords:
+        if kw.arg is None:
+            return None          # **kwargs: opaque
+        if kw.arg not in defaults:
+            continue
+        v = _const_num(mod, kw.value, scope)
+        if v is None:
+            return None
+        fields[kw.arg] = v
+    return fields
+
+
+def _schedule_fields(mod: astutil.Module, call: ast.Call,
+                     scope: Optional[ast.AST]
+                     ) -> Optional[Dict[str, float]]:
+    """Resolved (kind, start, end, begin_step, end_step, stages) for a
+    ``BudgetSchedule`` literal — classmethod or raw constructor."""
+    name = astutil.call_name(call) or ""
+    parts = name.rsplit(".", 2)
+    leaf = parts[-1]
+    if leaf in _SCHED_POS and len(parts) > 1 \
+            and parts[-2] == "BudgetSchedule":
+        fields = _call_fields(mod, call, scope, _SCHED_POS[leaf],
+                              _SCHED_DEFAULTS)
+        if fields is None:
+            return None
+        if leaf == "warmup_exact":
+            fields["start"] = 1.0
+        fields["kind"] = leaf          # type: ignore[assignment]
+        return fields
+    if leaf == "BudgetSchedule":
+        kind = "constant"
+        kind_expr: Optional[ast.expr] = (
+            call.args[0] if call.args else astutil.keyword_arg(
+                call, "kind"))
+        if kind_expr is not None:
+            kind_expr = _resolve_name(mod, kind_expr, scope)
+            if not (isinstance(kind_expr, ast.Constant)
+                    and isinstance(kind_expr.value, str)):
+                return None
+            kind = kind_expr.value
+        fields = _call_fields(
+            mod, ast.Call(func=call.func, args=call.args[1:],
+                          keywords=call.keywords),
+            scope, ("start", "end", "begin_step", "end_step", "stages"),
+            _SCHED_DEFAULTS)
+        if fields is None:
+            return None
+        fields["kind"] = kind          # type: ignore[assignment]
+        return fields
+    return None
+
+
+def _budget_at(f: Dict[str, float], step: int) -> Optional[float]:
+    """Mirror of ``BudgetSchedule.budget_at`` over resolved fields."""
+    kind = f["kind"]
+    if kind == "constant":
+        return f["end"]
+    if kind == "warmup_exact":
+        return f["start"] if step < f["begin_step"] else f["end"]
+    if kind == "linear":
+        if step <= f["begin_step"]:
+            return f["start"]
+        if step >= f["end_step"]:
+            return f["end"]
+        frac = (step - f["begin_step"]) / (f["end_step"]
+                                           - f["begin_step"])
+        stages = max(int(f["stages"]), 1)
+        frac = min(int(frac * stages) + 1, stages) / stages
+        return f["start"] * (1.0 - frac) + f["end"] * frac
+    return None                        # unknown kind string: skip
+
+
+def _module_horizon(mod: astutil.Module) -> Optional[int]:
+    """Declared step horizon: the max of int-literal ``steps=`` call
+    keywords (``RunSpec(steps=200)``, ``run.fit(steps=50)``) and
+    module-level ``STEPS = N``-style constants.  None when the module
+    declares no literal horizon (horizon checks are then skipped —
+    the proof obligation belongs to whoever supplies the steps)."""
+    best: Optional[int] = None
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            kw = astutil.keyword_arg(node, "steps")
+            if isinstance(kw, ast.Constant) and isinstance(
+                    kw.value, int) and not isinstance(kw.value, bool):
+                best = max(best or 0, kw.value)
+    for stmt in mod.tree.body:
+        tgt: Optional[ast.expr] = None
+        val: Optional[ast.expr] = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt, val = stmt.targets[0], stmt.value
+        elif isinstance(stmt, ast.AnnAssign):
+            tgt, val = stmt.target, stmt.value
+        if (isinstance(tgt, ast.Name)
+                and tgt.id.lower() in _HORIZON_NAMES
+                and isinstance(val, ast.Constant)
+                and isinstance(val.value, int)
+                and not isinstance(val.value, bool)):
+            best = max(best or 0, val.value)
+    return best
+
+
+def _pt008(mod: astutil.Module, node: ast.Call,
+           message: str) -> Finding:
+    return Finding(rule="PT008", path=mod.path, line=node.lineno,
+                   col=node.col_offset + 1,
+                   symbol=mod.symbol_for(node), message=message)
+
+
+def _check_schedule_literal(mod: astutil.Module, node: ast.Call,
+                            f: Dict[str, float],
+                            horizon: Optional[int]) -> List[Finding]:
+    out: List[Finding] = []
+    kind = f["kind"]
+    if kind == "linear" and f["end_step"] <= f["begin_step"]:
+        out.append(_pt008(
+            mod, node,
+            f"linear schedule with end_step={int(f['end_step'])} <= "
+            f"begin_step={int(f['begin_step'])} never anneals: the "
+            f"constructor raises (or the raw dataclass divides by "
+            f"zero at the first post-warmup step)"))
+        return out
+    if horizon is None or kind == "constant":
+        return out
+    final = _budget_at(f, horizon)
+    if final is None or abs(final - f["end"]) <= _EPS:
+        return out
+    if kind == "warmup_exact":
+        detail = (f"warmup_exact(begin_step={int(f['begin_step'])}) "
+                  f"never leaves the exact-path warmup within the "
+                  f"declared horizon of {horizon} steps")
+    else:
+        detail = (f"linear anneal to end_step={int(f['end_step'])} "
+                  f"plateaus at budget {final:g} by the declared "
+                  f"horizon of {horizon} steps")
+    out.append(_pt008(
+        mod, node,
+        f"{detail} — the run finishes at budget {final:g}, short of "
+        f"the configured end budget {f['end']:g}; the memory budget "
+        f"the policy promises is never realized (shrink end_step / "
+        f"begin_step or raise the horizon)"))
+    return out
+
+
+def _check_fixed_schedule(mod: astutil.Module, node: ast.Call,
+                          scope: Optional[ast.AST]) -> List[Finding]:
+    sched_expr = astutil.keyword_arg(node, "schedule")
+    if sched_expr is None:
+        return []
+    sched_expr = _resolve_name(mod, sched_expr, scope)
+    if not isinstance(sched_expr, ast.Call):
+        return []
+    f = _schedule_fields(mod, sched_expr, scope)
+    if f is None:
+        return []
+    bounds = _call_fields(mod, node, scope, (), _FIXED_DEFAULTS)
+    if bounds is None:
+        return []
+    end = f["end"]
+    if bounds["b_min"] - _EPS <= end <= bounds["b_max"] + _EPS:
+        return []
+    return [_pt008(
+        mod, node,
+        f"FixedSchedule clamp band [{bounds['b_min']:g}, "
+        f"{bounds['b_max']:g}] excludes the wrapped schedule's end "
+        f"budget {end:g}: the controller clamps every proposal, so "
+        f"the schedule terminates at the band edge, never at its "
+        f"configured end")]
+
+
+def _check_grid_controller(mod: astutil.Module, node: ast.Call,
+                           scope: Optional[ast.AST],
+                           horizon: Optional[int]) -> List[Finding]:
+    if horizon is None:
+        return []
+    fields = _call_fields(mod, node, scope, (), _CTRL_DEFAULTS)
+    if fields is None:
+        return []
+    levels = max(int(fields["levels"]), 2)
+    warmup = max(int(fields["warmup"]), 0)
+    needed = warmup + levels - 1
+    if horizon >= needed:
+        return []
+    leaf = (astutil.call_name(node) or "").rsplit(".", 1)[-1]
+    return [_pt008(
+        mod, node,
+        f"{leaf} grid has {levels} levels behind a {warmup}-step "
+        f"warmup: reaching the far plateau takes at least {needed} "
+        f"steps (one level per step) but the declared horizon is "
+        f"{horizon} — the configured b_min/b_max extreme is "
+        f"unreachable within the run")]
+
+
+def check_schedules(modules: Iterable[astutil.Module]) -> List[Finding]:
+    """PT008 over every resolvable schedule/controller literal."""
+    out: List[Finding] = []
+    for mod in modules:
+        horizon = _module_horizon(mod)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            scope = _enclosing_fn(mod, node)
+            leaf = (astutil.call_name(node) or "").rsplit(".", 1)[-1]
+            if leaf == "FixedSchedule":
+                out.extend(_check_fixed_schedule(mod, node, scope))
+                continue
+            if leaf in _CTRL_LEAVES:
+                out.extend(_check_grid_controller(mod, node, scope,
+                                                  horizon))
+                continue
+            f = _schedule_fields(mod, node, scope)
+            if f is not None:
+                out.extend(_check_schedule_literal(mod, node, f,
+                                                   horizon))
+    return out
+
+
 def check(modules: Iterable[astutil.Module],
           universe: Optional[TagUniverse] = None) -> List[Finding]:
+    mods = list(modules)
+    out = check_schedules(mods)
     policies: List[PolicyLit] = []
-    for mod in modules:
+    for mod in mods:
         policies.extend(extract_policies(mod))
     if not policies:
-        return []
+        return out
     if universe is None:
         universe = tag_universe()
-    return check_policies(policies, universe)
+    out.extend(check_policies(policies, universe))
+    return out

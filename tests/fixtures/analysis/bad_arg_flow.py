@@ -1,0 +1,19 @@
+"""Fixture: traced value flows into a helper via a call arg (JL001).
+
+``summarize`` carries no decorator and is never jitted itself — it is
+only *called* from a jitted function with a traced argument.  The
+call-graph edge taints the helper's parameter, so the host sync on it
+is flagged where it actually lives.
+"""
+import jax
+
+
+def summarize(metrics, label):
+    return {label: float(metrics)}  # JL001: host sync on traced arg
+
+
+@jax.jit
+def train_step(state, batch):
+    loss = (state * batch).sum()
+    report = summarize(loss, "loss")
+    return state, report

@@ -1,0 +1,20 @@
+"""Fixture: builder product re-bound before jitting (JL005).
+
+The step function is re-assigned twice after construction; only the
+final alias reaches ``jax.jit``.  Name-chasing one assignment deep
+(the old heuristic) loses the chain — the dataflow lattice keeps the
+function set through every re-bind.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def build_step(cfg):
+    def step(state, batch):
+        if batch.sum() > 0:  # JL005: Python branch on a traced value
+            return state + 1
+        return jnp.zeros_like(state)
+
+    candidate = step
+    chosen = candidate
+    return jax.jit(chosen)

@@ -1,0 +1,22 @@
+"""Fixture: closure stashed in a dict, jitted statements later (JL003).
+
+The pre-dataflow heuristic only recognized decorated functions and
+direct ``make_*`` returns as traced; a step function carried through a
+dict literal and jitted three statements later was invisible to it.
+The dataflow engine tracks the function through the dict pack, the
+subscript, and the re-bind, so the mutable closure capture is flagged.
+"""
+import jax
+
+
+def build_bundle(cfg):
+    seen = []  # mutable builder state
+
+    def step(state, batch):
+        seen.append(len(seen))  # JL003: appends invisible after trace
+        return state
+
+    bundle = {"step": step, "name": cfg.name}
+    fn = bundle["step"]
+    compiled = jax.jit(fn)
+    return compiled

@@ -1,0 +1,22 @@
+"""Fixture: traced scope through a decorator chain (JL005).
+
+``functools.partial(jax.jit, static_argnames=...)`` is a jit in a
+trench coat: the engine unwraps the partial, honors the static
+argnames (branching on ``mode`` below is fine), and still flags the
+Python branch on the genuinely traced argument.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def normalize(x, mode):
+    if mode == "l2":  # fine: mode is a static argname
+        denom = jnp.sqrt((x * x).sum())
+    else:
+        denom = jnp.abs(x).sum()
+    if denom == 0:  # JL005: Python branch on a traced value
+        return x
+    return x / denom

@@ -1,0 +1,14 @@
+"""Fixture: budget schedule that plateaus short of its end (PT008).
+
+The run declares a 100-step horizon but anneals toward ``end_step``
+500: abstract interpretation of the plateau-quantized schedule shows
+the final realized budget is 0.775, nowhere near the configured 0.1 —
+the activation-memory saving the policy promises never materializes.
+"""
+from repro.core.policy import BudgetSchedule
+
+STEPS = 100
+
+ANNEAL = BudgetSchedule.linear(
+    start=1.0, end=0.1, begin_step=0, end_step=500,
+    stages=4)  # PT008: budget_at(100) == 0.775, not 0.1

@@ -1,0 +1,14 @@
+"""Fixture: sampled-dense tags left to the fallback (PT002).
+
+The rules claim the attention projections but leave ``b0/mlp_up`` —
+a token-dim (sampled-dense) tag — to the fallback config, silently.
+"""
+from repro.core import PolicyRules
+from repro.core.config import EstimatorKind, WTACRSConfig
+
+CFG = WTACRSConfig(kind=EstimatorKind.WTA_CRS, budget=0.3)
+
+RULES = PolicyRules.of(
+    ("b0/attn_q", CFG),
+    ("b0/attn_o", CFG),  # PT002: b0/mlp_up falls through uncovered
+)

@@ -1,0 +1,5 @@
+"""Fixture: file that does not parse (AN001)."""
+
+
+def broken(:
+    return None

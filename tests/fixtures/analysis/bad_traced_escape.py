@@ -1,0 +1,21 @@
+"""Fixture: traced value escapes to host state (JL007).
+
+The step function appends its per-step loss — a tracer during
+compilation — into a list owned by the enclosing builder.  The list
+outlives the traced scope: after the first trace it holds one tracer
+(or one stale compile-time value) forever, while every later step's
+append never happens.  This is the write-side twin of JL003 (which
+covers *reads* of mutable captures).
+"""
+import jax
+
+
+def make_recording_step(cfg):
+    losses = []
+
+    def step(state, batch):
+        loss = (state * batch).sum()
+        losses.append(loss)  # JL007: traced value stored in host state
+        return state
+
+    return jax.jit(step)

@@ -1,0 +1,26 @@
+"""Fixture: traced fn reached through tuple packing/unpacking (JL001).
+
+``pair_builder`` returns ``(step, init)``; the caller unpacks the
+tuple and jits the first element.  The dataflow engine follows the
+function value through the callee's return summary, the tuple pack,
+and the unpack — ``pair_builder`` deliberately does NOT use the
+``make_*`` naming the heuristic keyed on — so the host sync inside
+``step`` is flagged even though ``step`` carries no decorator.
+"""
+import jax
+
+
+def pair_builder(cfg):
+    def step(state, batch):
+        loss = (state * batch).sum()
+        return state, float(loss)  # JL001: host sync under jit
+
+    def init(key):
+        return key
+
+    return step, init
+
+
+def build(cfg):
+    step_fn, init_fn = pair_builder(cfg)
+    return jax.jit(step_fn), init_fn

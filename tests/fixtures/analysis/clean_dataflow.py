@@ -1,0 +1,50 @@
+"""Negative fixture: every propagation edge, zero defects.
+
+Exercises the same flows the ``bad_*`` dataflow fixtures use —
+dict carriage, tuple unpacking, re-binding, argument flow, a partial
+decorator chain, and an immutable closure capture — all written
+correctly.  The analyzers must stay silent.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def scale_helper(x, factor):
+    return x * factor  # traced arg used only in traced math
+
+
+def pair_builder(cfg):
+    def step(state, batch):
+        loss = (state * batch).sum()
+        return state, loss  # loss stays on device
+
+    def init(key):
+        return jax.random.normal(key, (4,))
+
+    return step, init
+
+
+def build(cfg):
+    step_fn, init_fn = pair_builder(cfg)
+    bundle = {"step": step_fn, "init": init_fn}
+    chosen = bundle["step"]
+    return jax.jit(chosen), init_fn
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def normalize(x, mode):
+    if mode == "l2":  # static argname: branching is fine
+        return x / jnp.sqrt((x * x).sum())
+    return x / jnp.abs(x).sum()
+
+
+def make_scaled_step(cfg):
+    factor = 2.0  # immutable capture: baked in at trace time, fine
+
+    def step(state, batch):
+        scaled = scale_helper(state, factor)
+        return jnp.where(batch > 0, scaled, state)
+
+    return jax.jit(step)

@@ -1,0 +1,17 @@
+"""Fixture: builder product the lattice cannot follow (JL001 @ note).
+
+The step function is stored onto a foreign object's attribute —
+dynamic flow the dataflow lattice does not model.  The ``make_*``
+builder idiom still marks the inner def as a *candidate* traced
+scope, so it is scanned at NOTE severity with a heuristic tag: a
+human should look, the tool cannot prove.
+"""
+
+
+def make_registered_step(cfg, registry):
+    def step(state, batch):
+        loss = (state * batch).sum()
+        return state, int(loss)  # JL001 (note): sync if ever jitted
+
+    registry.step = step  # attribute store on a foreign object
+    return registry

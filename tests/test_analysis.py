@@ -38,13 +38,22 @@ def run_fixture(name, **kw):
 
 # -- one fixture, one finding -------------------------------------------------
 
-@pytest.mark.parametrize("name,rule", [
+# rule -> fixture(s): the registry-coverage guard below keeps this
+# table exhaustive, so every registered rule stays demonstrable.
+FIXTURE_TABLE = [
     ("bad_jit_sync.py", "JL001"),
+    ("bad_tuple_unpack.py", "JL001"),       # dataflow: tuple unpack
+    ("bad_arg_flow.py", "JL001"),           # dataflow: argument flow
+    ("note_unresolved_flow.py", "JL001"),   # heuristic NOTE fallback
     ("bad_tick_sync.py", "JL002"),
     ("bad_closure.py", "JL003"),
+    ("bad_closure_dict.py", "JL003"),       # dataflow: dict carriage
     ("bad_key_reuse.py", "JL004"),
     ("bad_tracer_branch.py", "JL005"),
+    ("bad_builder_rebind.py", "JL005"),     # dataflow: re-bind chain
+    ("bad_decorator_chain.py", "JL005"),    # dataflow: partial(jit)
     ("bad_hash_key.py", "JL006"),
+    ("bad_traced_escape.py", "JL007"),
     ("bad_blockspec_arity.py", "PK001"),
     ("bad_blockspec_rank.py", "PK002"),
     ("bad_blockspec.py", "PK003"),
@@ -53,9 +62,19 @@ def run_fixture(name, **kw):
     ("bad_unpaired_dma.py", "PK006"),
     ("bad_unguarded_tail.py", "PK007"),
     ("bad_policy.py", "PT001"),
+    ("bad_policy_uncovered.py", "PT002"),
     ("bad_policy_cached_rows.py", "PT003"),
     ("bad_policy_shadowed.py", "PT004"),
-])
+    ("bad_policy_schedule.py", "PT008"),
+    ("bad_syntax.py", "AN001"),
+]
+
+# Rules with no file fixture by construction: they judge the baseline
+# itself, and are exercised by test_baseline_unjustified_and_stale.
+BASELINE_META_RULES = {"AN002", "AN003"}
+
+
+@pytest.mark.parametrize("name,rule", FIXTURE_TABLE)
 def test_rule_fires_exactly_once(name, rule):
     findings = run_fixture(name)
     hits = [f for f in findings if f.rule == rule]
@@ -69,6 +88,51 @@ def test_rule_fires_exactly_once(name, rule):
 
 def test_clean_fixture_is_silent():
     assert run_fixture("clean.py") == []
+
+
+def test_clean_dataflow_fixture_is_silent():
+    """Every propagation edge exercised defect-free stays silent."""
+    assert run_fixture("clean_dataflow.py") == []
+
+
+def test_note_fallback_severity_and_tag():
+    """Unresolvable dynamic flow demotes to NOTE with a visible tag."""
+    (f,) = run_fixture("note_unresolved_flow.py")
+    assert f.rule == "JL001"
+    assert f.severity == "note"
+    assert "heuristic" in f.message
+
+
+def test_closure_dict_regression_both_halves():
+    """Acceptance: the dict-carried closure is flagged by the
+    dataflow-backed JL003 AND provably invisible to the pre-PR
+    heuristic — both halves, so neither can silently regress."""
+    from repro.analysis import astutil, jax_lints
+
+    findings = run_fixture("bad_closure_dict.py")
+    assert [f.rule for f in findings] == ["JL003"]
+
+    (mod,) = astutil.load_modules([fixture("bad_closure_dict.py")])[0]
+    heuristic = {f.name
+                 for f in jax_lints.traced_functions_heuristic(mod)}
+    assert "step" not in heuristic
+
+
+def test_registry_ids_unique_and_covered():
+    """register_rule rejects duplicate ids, and every registered rule
+    is demonstrable: a fixture in FIXTURE_TABLE or a baseline-meta
+    rule with its own dedicated test."""
+    from repro.analysis.findings import RULES, register_rule
+
+    with pytest.raises(ValueError):
+        register_rule("JL001", "error", "imposter")
+    assert "imposter" not in RULES["JL001"][1]
+
+    covered = {rule for _, rule in FIXTURE_TABLE} | BASELINE_META_RULES
+    missing = set(RULES) - covered
+    assert not missing, f"rules without a fixture: {sorted(missing)}"
+    unknown = {rule for _, rule in FIXTURE_TABLE} - set(RULES)
+    assert not unknown, f"fixtures for unregistered rules: {unknown}"
 
 
 def test_finding_shape():
@@ -169,6 +233,68 @@ def test_cli_json_output(capsys):
     assert f["rule"] == "JL006"
     assert f["severity"] == "error"
     assert len(f["fingerprint"]) == 16
+
+
+def test_formats_agree_on_counts(capsys):
+    """text, --json, and --format sarif see the same findings."""
+    paths = [fixture("bad_jit_sync.py"), fixture("bad_vmem.py"),
+             fixture("bad_traced_escape.py")]
+
+    assert main(paths + ["--no-policy"]) == 1
+    text = capsys.readouterr().out
+    text_count = sum(
+        1 for line in text.splitlines() if ": JL" in line or
+        ": PK" in line or ": PT" in line or ": AN" in line)
+
+    assert main(paths + ["--no-policy", "--format", "json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+
+    assert main(paths + ["--no-policy", "--format", "sarif"]) == 1
+    sarif = json.loads(capsys.readouterr().out)
+    results = sarif["runs"][0]["results"]
+
+    assert text_count == len(doc["findings"]) == len(results) == 3
+    assert sarif["version"] == "2.1.0"
+    by_level = sorted(r["level"] for r in results)
+    by_sev = sorted(f["severity"] for f in doc["findings"])
+    assert by_level == by_sev  # severities map 1:1 onto SARIF levels
+    fps = {r["partialFingerprints"]["reproAnalysis/v1"]
+           for r in results}
+    assert fps == {f["fingerprint"] for f in doc["findings"]}
+
+
+def test_changed_only(tmp_path, monkeypatch, capsys):
+    """--changed-only scopes to git-diff files (plus untracked)."""
+    import subprocess
+
+    repo = tmp_path / "repo"
+    repo.mkdir()
+    monkeypatch.chdir(repo)
+    for cmd in (["git", "init", "-q"],
+                ["git", "config", "user.email", "t@example.com"],
+                ["git", "config", "user.name", "t"]):
+        subprocess.run(cmd, check=True, capture_output=True)
+    (repo / "clean.py").write_text("X = 1\n")
+    subprocess.run(["git", "add", "."], check=True)
+    subprocess.run(["git", "commit", "-qm", "seed"], check=True)
+
+    # nothing changed -> nothing analyzed, exit 0
+    assert main([".", "--no-policy", "--changed-only", "HEAD"]) == 0
+    assert "no changed python files" in capsys.readouterr().out
+
+    # a modified file with a finding gates; an untracked one counts too
+    (repo / "clean.py").write_text(
+        "import jax\n\n@jax.jit\ndef f(x):\n    return float(x)\n")
+    assert main([".", "--no-policy", "--changed-only", "HEAD"]) == 1
+    assert "JL001" in capsys.readouterr().out
+
+    from repro.analysis import changed_files
+    (repo / "fresh.py").write_text("Y = 2\n")
+    got = changed_files("HEAD", ["."])
+    assert [os.path.basename(p) for p in got] == ["clean.py",
+                                                  "fresh.py"]
+    # scoping: intersect with the requested paths
+    assert changed_files("HEAD", [str(repo / "elsewhere")]) == []
 
 
 def test_cli_write_then_baseline_suppresses(tmp_path, capsys):

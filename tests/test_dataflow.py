@@ -1,0 +1,247 @@
+"""The dataflow engine: one test per propagation edge, plus the
+live-repo acceptance bound (the lattice resolves a superset of the
+old syntactic heuristic's traced scopes)."""
+import ast
+import os
+import textwrap
+
+from repro.analysis import astutil, dataflow, jax_lints
+from repro.analysis import pallas_contracts as pk
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(os.path.dirname(HERE), "src", "repro")
+
+
+def _mods(tmp_path, **sources):
+    """Write {name: source} as modules and load them."""
+    out = []
+    for name, src in sources.items():
+        p = tmp_path / f"{name}.py"
+        p.write_text(textwrap.dedent(src))
+        out.append(astutil.Module.load(str(p)))
+    return out
+
+
+def _program(tmp_path, **sources):
+    mods = _mods(tmp_path, **sources)
+    return dataflow.Program.build(mods), mods
+
+
+def _fn(mod, name):
+    for f in mod.functions():
+        if f.name == name:
+            return f
+    raise AssertionError(f"no function {name!r} in {mod.path}")
+
+
+def _traced_names(program, mod):
+    return {f.name for f in program.traced_functions(mod)}
+
+
+# -- propagation edges --------------------------------------------------------
+
+def test_dict_carried_closure(tmp_path):
+    """The acceptance flow: fn stashed in a dict, jitted later."""
+    program, (m,) = _program(tmp_path, steps="""
+        import jax
+
+        def build(cfg):
+            def step(state, batch):
+                return state
+            bundle = {"step": step, "name": cfg.name}
+            fn = bundle["step"]
+            return jax.jit(fn)
+        """)
+    assert "step" in _traced_names(program, m)
+    # ... and the old heuristic provably misses it
+    heur = {f.name for f in jax_lints.traced_functions_heuristic(m)}
+    assert "step" not in heur
+
+
+def test_tuple_pack_unpack(tmp_path):
+    program, (m,) = _program(tmp_path, steps="""
+        import jax
+
+        def pair_builder(cfg):
+            def step(s, b):
+                return s
+            def init(key):
+                return key
+            return step, init
+
+        def build(cfg):
+            step_fn, init_fn = pair_builder(cfg)
+            return jax.jit(step_fn)
+        """)
+    names = _traced_names(program, m)
+    assert "step" in names
+    assert "init" not in names  # unpacked but never jitted
+
+
+def test_rebind_chain(tmp_path):
+    program, (m,) = _program(tmp_path, steps="""
+        import jax
+
+        def build(cfg):
+            def step(s, b):
+                return s
+            candidate = step
+            chosen = candidate
+            return jax.jit(chosen)
+        """)
+    assert "step" in _traced_names(program, m)
+
+
+def test_builder_return_is_root(tmp_path):
+    """A make_* product is traced even with no visible consumer."""
+    program, (m,) = _program(tmp_path, steps="""
+        def make_step(cfg):
+            def step(s, b):
+                return s
+            return step
+        """)
+    assert "step" in _traced_names(program, m)
+
+
+def test_argument_flow_taints_only_flowing_params(tmp_path):
+    program, (m,) = _program(tmp_path, steps="""
+        import jax
+
+        def helper(metrics, label):
+            return {label: metrics}
+
+        @jax.jit
+        def step(state, batch):
+            loss = (state * batch).sum()
+            return helper(loss, "loss")
+        """)
+    helper = _fn(m, "helper")
+    assert program.is_traced(helper)
+    taints = program.tainted_names(helper)
+    assert "metrics" in taints
+    assert "label" not in taints
+
+
+def test_decorator_chain_partial_statics(tmp_path):
+    program, (m,) = _program(tmp_path, steps="""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def normalize(x, mode):
+            return x
+        """)
+    norm = _fn(m, "normalize")
+    assert program.is_traced(norm)
+    taints = program.tainted_names(norm)
+    assert "x" in taints
+    assert "mode" not in taints
+
+
+def test_cross_module_argument_flow(tmp_path):
+    program, mods = _program(
+        tmp_path,
+        util="""
+            def helper(x):
+                return x
+            """,
+        steps="""
+            import jax
+            import util
+
+            @jax.jit
+            def step(state, batch):
+                return util.helper(state)
+            """)
+    util = next(m for m in mods if m.path.endswith("util.py"))
+    assert "helper" in _traced_names(program, util)
+
+
+def test_scan_body_and_nesting(tmp_path):
+    program, (m,) = _program(tmp_path, steps="""
+        import jax
+        from jax import lax
+
+        def make_outer(cfg):
+            def outer(state, xs):
+                def body(carry, x):
+                    return carry, x
+                return lax.scan(body, state, xs)
+            return outer
+        """)
+    names = _traced_names(program, m)
+    assert {"outer", "body"} <= names
+
+
+def test_fallback_functions_for_dynamic_flow(tmp_path):
+    """Attribute store on a foreign object defeats the lattice; the
+    make_* idiom still surfaces the inner def as a NOTE candidate."""
+    program, (m,) = _program(tmp_path, steps="""
+        def make_registered(cfg, registry):
+            def step(s, b):
+                return s
+            registry.step = step
+            return registry
+        """)
+    assert "step" not in _traced_names(program, m)
+    assert [f.name for f in program.fallback_functions(m)] == ["step"]
+
+
+def test_resolve_functions_through_dict(tmp_path):
+    program, (m,) = _program(tmp_path, kernels="""
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def wrapper(x):
+            table = {"copy": kern}
+            chosen = table["copy"]
+            return chosen
+        """)
+    wrapper = _fn(m, "wrapper")
+    expr = ast.parse("chosen").body[0].value
+    infos = program.resolve_functions(wrapper, m, expr)
+    assert [fi.node.name for fi in infos] == ["kern"]
+
+
+def test_pallas_kernel_resolved_through_rebind(tmp_path):
+    """PK discovery rides the lattice: a re-bound kernel body is
+    found, so its missing f32 accumulation is flagged."""
+    (m,) = _mods(tmp_path, kernels="""
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def matmul_kernel(x_ref, y_ref, o_ref):
+            o_ref[...] = jnp.dot(x_ref[...], y_ref[...])
+
+        def wrapper(x, y):
+            body = matmul_kernel
+            return pl.pallas_call(
+                body,
+                out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+            )(x, y)
+        """)
+    program = dataflow.Program.build([m])
+    calls = pk.extract_pallas_calls(m, program)
+    assert len(calls) == 1
+    assert calls[0].kernel is not None
+    assert calls[0].kernel.name == "matmul_kernel"
+    findings = pk.check([m], program=program)
+    assert [f.rule for f in findings] == ["PK005"]
+
+
+# -- acceptance: engine >= heuristic on the live repo -------------------------
+
+def test_live_repo_engine_superset_of_heuristic():
+    mods, broken = astutil.load_modules([SRC])
+    assert not broken
+    program = dataflow.Program.build(mods)
+    missing = []
+    for mod in mods:
+        engine = {id(f) for f in program.traced_functions(mod)}
+        fallback = {id(f) for f in program.fallback_functions(mod)}
+        for fn in jax_lints.traced_functions_heuristic(mod):
+            if id(fn) not in engine | fallback:
+                missing.append(f"{mod.path}:{fn.name}")
+    assert not missing, (
+        f"dataflow engine lost traced scopes the heuristic had: "
+        f"{missing}")
