@@ -38,12 +38,14 @@ from repro.train import data, optim, znorm
 STEPS = 40
 
 
-def train_once(cfg, policy, lr=3e-3, steps=STEPS, seed=0):
+def train_once(cfg, policy, lr=3e-3, steps=STEPS, seed=0, opt=None):
     ds = data.SyntheticLM(vocab_size=cfg.vocab_size, seq_len=24,
                           n_samples=64, seed=3, branching=2)
-    state = train_steps.init_train_state(cfg, jax.random.PRNGKey(seed))
+    opt = opt if opt is not None else optim.AdamWConfig()
+    state = train_steps.init_train_state(cfg, jax.random.PRNGKey(seed),
+                                         opt=opt)
     step = jax.jit(train_steps.make_train_step(
-        cfg, policy, optim.AdamWConfig(),
+        cfg, policy, opt,
         optim.linear_warmup_constant(lr, warmup=5)))
     it = ds.epoch(8)
     t0 = time.perf_counter()
@@ -144,6 +146,38 @@ def adaptive_comparison(steps):
             f"not reusing the compiled train step")
 
 
+def optim_layout_comparison(steps):
+    """Dense AdamW vs the compressed optimizer-state layouts
+    (``repro.optim``) on identical data/policy/seed.  Memory-side
+    numbers live in bench_memory; this is the accuracy half of that
+    trade: the factored (CAME) run must land within 5% of the dense
+    run's final loss — the acceptance gate bench-smoke CI enforces."""
+    from repro import optim as optim_lib
+
+    cfg = get_config("qwen2.5-3b", reduced=True)
+    pol = cm.Policy(wtacrs=WTACRSConfig(kind=EstimatorKind.WTA_CRS,
+                                        budget=0.3, min_rows=4))
+    specs = [
+        ("dense", optim.AdamWConfig()),
+        ("factored", optim_lib.OptimSpec.of(
+            dict(pattern="*", layout="factored", momentum=True))),
+        ("lowrank@8", optim_lib.OptimSpec.of(
+            dict(pattern="unit/*", layout="lowrank", rank=8,
+                 refresh_every=10))),
+    ]
+    finals = {}
+    for name, opt in specs:
+        losses, wall = train_once(cfg, pol, steps=steps, opt=opt)
+        finals[name] = losses[-1]
+        emit(f"optim_layout_final_loss[{name}]", wall,
+             f"loss={losses[-1]:.4f} "
+             f"gap_vs_dense={losses[-1] - finals['dense']:+.4f}")
+    if finals["factored"] > finals["dense"] * 1.05:
+        raise AssertionError(
+            f"factored-optimizer final loss {finals['factored']:.4f} "
+            f"more than 5% above dense AdamW's {finals['dense']:.4f}")
+
+
 def run():
     cfg = get_config("qwen2.5-3b", reduced=True)
     steps = common.smoke_or(10, STEPS)
@@ -188,3 +222,4 @@ def run():
              f"final_loss={losses[-1]:.4f}")
 
     adaptive_comparison(steps=common.smoke_or(12, 30))
+    optim_layout_comparison(steps=common.smoke_or(12, 30))

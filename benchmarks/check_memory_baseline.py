@@ -1,0 +1,171 @@
+"""Gate a fresh BENCH_memory.json against the checked-in baseline.
+
+    python benchmarks/check_memory_baseline.py \
+        bench-artifacts/BENCH_memory.json \
+        benchmarks/baselines/BENCH_memory.json
+
+Byte counts are deterministic functions of the model config (jaxpr
+residual audit + optimizer-state shape math, no timing involved), so
+unlike the kernel/serving gates this one can hold the numbers to a
+tight tolerance — but the runner's JAX version can move the residual
+audit slightly, so the gate is structural plus ratio floors:
+
+* the artifact carries the baseline's full schema (config block, the
+  per-policy activation section OR an explicit availability=false skip
+  with a reason, the per-spec optimizer section, the combined row) —
+  a refactor that silently drops a section fails here;
+* the config matches the baseline (same workload measured);
+* the acceptance floors hold: the mixed factored/low-rank optimizer
+  spec is >= 3x smaller than dense AdamW, and (when the activation
+  audit ran) WTA-CRS@0.3 compresses activations >= 2x;
+* no >10% ratio regression vs the baseline's recorded reductions
+  (optimizer mixed reduction, combined reduction).
+
+The activation section is allowed to be skipped (``available: false``)
+because ``saved_residuals`` tracks a private JAX module; the optimizer
+section and its floors are never optional.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+CONFIG_KEYS = ("arch", "reduced", "batch", "seq")
+OPTIM_SPECS = ("dense_adamw", "factored_came", "factored", "lowrank@8",
+               "mixed")
+OPT_COMPRESSION_FLOOR = 3.0      # mixed spec vs dense AdamW
+ACT_COMPRESSION_FLOOR = 2.0      # wtacrs@0.3 vs full activations
+REGRESSION_TOLERANCE = 0.10      # >10% reduction drop vs baseline fails
+
+
+def _finite_pos(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
+
+
+def check(artifact: dict, baseline: dict) -> list:
+    errors = []
+    cfg = artifact.get("config", {})
+    base_cfg = baseline.get("config", {})
+    for key in CONFIG_KEYS:
+        if key not in cfg:
+            errors.append(f"missing config key {key!r}")
+        elif cfg[key] != base_cfg.get(key):
+            errors.append(f"config drift: {key} = {cfg[key]!r} but "
+                          f"baseline measured {base_cfg.get(key)!r}")
+
+    # -- activation section: present, and either real rows or a skip --
+    act = artifact.get("activation")
+    if not isinstance(act, dict):
+        errors.append("missing 'activation' section")
+    elif act.get("available"):
+        for block in ("bytes", "compression"):
+            rows = act.get(block)
+            if not isinstance(rows, dict) or "full" not in rows \
+                    or "wtacrs@0.3" not in rows:
+                errors.append(f"activation.{block} = {rows!r} (want "
+                              f"full + wtacrs@0.3 rows at least)")
+                continue
+            bad = [n for n, v in rows.items() if not _finite_pos(v)]
+            if bad:
+                errors.append(f"activation.{block}: non-finite values "
+                              f"for {bad}")
+        comp = act.get("compression", {}).get("wtacrs@0.3")
+        if _finite_pos(comp) and comp < ACT_COMPRESSION_FLOOR:
+            errors.append(
+                f"activation compression wtacrs@0.3 = {comp:.3f}: must "
+                f"be >= {ACT_COMPRESSION_FLOOR}x vs full")
+    elif not act.get("reason"):
+        errors.append("activation section skipped without a reason")
+
+    # -- optimizer section: never optional ----------------------------
+    opt = artifact.get("optimizer")
+    if not isinstance(opt, dict):
+        errors.append("missing 'optimizer' section")
+        opt = {}
+    if not _finite_pos(opt.get("dense_bytes")):
+        errors.append(f"optimizer.dense_bytes = "
+                      f"{opt.get('dense_bytes')!r} (want finite > 0)")
+    for block in ("bytes", "reduction"):
+        rows = opt.get(block, {})
+        for name in OPTIM_SPECS:
+            if not _finite_pos(rows.get(name) if isinstance(rows, dict)
+                               else None):
+                errors.append(f"optimizer.{block}[{name!r}] = "
+                              f"{rows.get(name) if isinstance(rows, dict) else rows!r} "
+                              f"(want finite > 0)")
+    red = opt.get("reduction", {})
+    mixed = red.get("mixed") if isinstance(red, dict) else None
+    if _finite_pos(mixed):
+        if mixed < OPT_COMPRESSION_FLOOR:
+            errors.append(
+                f"optimizer reduction mixed = {mixed:.3f}: the "
+                f"factored/low-rank spec must be >= "
+                f"{OPT_COMPRESSION_FLOOR}x smaller than dense AdamW")
+        base_mixed = baseline.get("optimizer", {}) \
+                             .get("reduction", {}).get("mixed")
+        if _finite_pos(base_mixed):
+            floor = (1.0 - REGRESSION_TOLERANCE) * base_mixed
+            if mixed < floor:
+                errors.append(
+                    f"optimizer reduction regression: {mixed:.3f} is "
+                    f"more than {REGRESSION_TOLERANCE:.0%} below the "
+                    f"baseline {base_mixed:.3f} (floor {floor:.3f})")
+
+    # -- combined row -------------------------------------------------
+    comb = artifact.get("combined")
+    if not isinstance(comb, dict):
+        errors.append("missing 'combined' section")
+        comb = {}
+    if comb.get("optim_spec") != "mixed":
+        errors.append(f"combined.optim_spec = "
+                      f"{comb.get('optim_spec')!r} (want 'mixed')")
+    if not _finite_pos(comb.get("optimizer_reduction")):
+        errors.append(f"combined.optimizer_reduction = "
+                      f"{comb.get('optimizer_reduction')!r} "
+                      f"(want finite > 0)")
+    if isinstance(act, dict) and act.get("available"):
+        total_red = comb.get("reduction")
+        if not _finite_pos(total_red):
+            errors.append(f"combined.reduction = {total_red!r} "
+                          f"(want finite > 0)")
+        else:
+            base_red = baseline.get("combined", {}).get("reduction")
+            if _finite_pos(base_red):
+                floor = (1.0 - REGRESSION_TOLERANCE) * base_red
+                if total_red < floor:
+                    errors.append(
+                        f"combined reduction regression: "
+                        f"{total_red:.3f} is more than "
+                        f"{REGRESSION_TOLERANCE:.0%} below the baseline "
+                        f"{base_red:.3f} (floor {floor:.3f})")
+    return errors
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} <fresh BENCH_memory.json> "
+                 f"<baseline json>")
+    with open(sys.argv[1]) as f:
+        artifact = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+    errors = check(artifact, baseline)
+    if errors:
+        for e in errors:
+            print(f"BASELINE CHECK FAILED: {e}", file=sys.stderr)
+        sys.exit(1)
+    comb = artifact["combined"]
+    opt_red = comb["optimizer_reduction"]
+    if artifact["activation"].get("available"):
+        print(f"memory baseline ok: optimizer x{opt_red:.2f} (mixed vs "
+              f"dense AdamW), combined x{comb['reduction']:.2f} "
+              f"(wtacrs@0.3 activations + mixed optimizer)")
+    else:
+        print(f"memory baseline ok: optimizer x{opt_red:.2f} (mixed vs "
+              f"dense AdamW); activation audit skipped: "
+              f"{artifact['activation'].get('reason', '')[:80]}")
+
+
+if __name__ == "__main__":
+    main()

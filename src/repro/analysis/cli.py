@@ -25,7 +25,9 @@ DEFAULT_BASELINE = "analysis-baseline.json"
 
 def analyze_paths(paths: Sequence[str], *, policy: bool = True,
                   vmem_budget: Optional[int] = None,
-                  tag_universe: Optional[dict] = None) -> List[Finding]:
+                  tag_universe: Optional[dict] = None,
+                  param_universe: Optional[dict] = None
+                  ) -> List[Finding]:
     """Run every analyzer family over ``paths`` and return raw findings
     (no baseline filtering).  The main entry point for tests.
 
@@ -43,7 +45,8 @@ def analyze_paths(paths: Sequence[str], *, policy: bool = True,
         modules, vmem_budget=vmem_budget, program=program))
     if policy:
         findings.extend(policy_check.check(modules,
-                                           universe=tag_universe))
+                                           universe=tag_universe,
+                                           param_universe=param_universe))
     return sort_findings(findings)
 
 

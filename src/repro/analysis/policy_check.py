@@ -8,15 +8,23 @@ the tags each ``models/registry.py`` architecture actually emits (the
 same ``tag_recorder`` + ``eval_shape`` enumeration the znorm cache
 uses — zero FLOPs, a few seconds for all architectures).
 
+The same decay mode applies to the optimizer-state layout rules
+(``repro.optim.OptimSpec``): their patterns match *parameter paths*
+instead of linear tags, so every literal ``OptimSpec.of`` /
+``LayoutRule`` pattern is additionally evaluated against the param-path
+universe each architecture's ``abstract_params`` emits.
+
   PT001  dead rule: pattern matches no tag of any architecture
+         (policy rules), or no parameter path (optimizer layout rules)
   PT002  uncovered sampled-dense tags: a rules-carrying policy leaves
          token-dim tags to the fallback (note; warning when the policy
          declares ``default=`` and thereby claims coverage)
   PT003  CACHED_GRAD rule matching a rows-dim tag (MoE-router class):
          the cache is keyed per dataset sample, a rows-dim tag has no
          cache column to read — the rule can never be honored
-  PT004  shadowed rule: every tag it matches is claimed by an earlier
-         rule (first-match-wins makes it unreachable)
+  PT004  shadowed rule: every tag (or param path) it matches is
+         claimed by an earlier rule (first-match-wins makes it
+         unreachable)
   PT008  schedule-termination proof: a ``BudgetSchedule`` /
          budget-controller literal whose trajectory — abstractly
          interpreted with the exact plateau-quantization arithmetic of
@@ -54,8 +62,11 @@ PT008 = register_rule("PT008", ERROR,
 
 # {arch name: {tag: "token" | "rows"}}
 TagUniverse = Dict[str, Dict[str, str]]
+# {arch name: [param path]} — the universe OptimSpec patterns match
+ParamUniverse = Dict[str, List[str]]
 
 _universe_cache: Optional[TagUniverse] = None
+_param_universe_cache: Optional[ParamUniverse] = None
 
 
 def tag_universe(reduced: bool = True) -> TagUniverse:
@@ -89,6 +100,36 @@ def tag_universe(reduced: bool = True) -> TagUniverse:
                 registry.abstract_params(cfg)[0], batch)
         universe[name] = {t: rec.dims[t] for t in tags}
     _universe_cache = universe
+    return universe
+
+
+def param_path_universe(reduced: bool = True) -> ParamUniverse:
+    """Parameter paths each registry architecture's ``abstract_params``
+    emits, joined with "/" exactly the way ``repro.optim`` (and the
+    checkpoint flattener) keys leaves.  Shape-only, cached per
+    process."""
+    global _param_universe_cache
+    if _param_universe_cache is not None:
+        return _param_universe_cache
+    import jax
+
+    from repro import configs
+    from repro.models import registry
+
+    def path_str(p):
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                return str(getattr(p, attr))
+        return str(p)
+
+    universe: ParamUniverse = {}
+    for name in configs.ARCH_NAMES:
+        cfg = configs.get_config(name, reduced=reduced)
+        params = registry.abstract_params(cfg)[0]
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        universe[name] = sorted(
+            "/".join(path_str(x) for x in path) for path, _ in flat)
+    _param_universe_cache = universe
     return universe
 
 
@@ -238,6 +279,129 @@ def extract_policies(mod: astutil.Module) -> List[PolicyLit]:
 
 
 # ---------------------------------------------------------------------------
+# optimizer layout-rule extraction (repro.optim.OptimSpec literals)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OptimRuleLit:
+    pattern: str
+    line: int
+    col: int
+
+
+@dataclasses.dataclass
+class OptimSpecLit:
+    mod: astutil.Module
+    node: ast.Call
+    rules: List[OptimRuleLit]
+
+    @property
+    def symbol(self) -> str:
+        return self.mod.symbol_for(self.node)
+
+
+def _optim_rule_pattern(entry: ast.expr) -> Optional[ast.expr]:
+    """The pattern expression of one OptimSpec.of entry: a LayoutRule
+    call, a dict(pattern=...) call, a {"pattern": ...} literal, or a
+    positional tuple."""
+    if isinstance(entry, ast.Call):
+        name = astutil.call_name(entry) or ""
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf == "dict" or "LayoutRule" in name:
+            for kw in entry.keywords:
+                if kw.arg == "pattern":
+                    return kw.value
+            if "LayoutRule" in name and entry.args:
+                return entry.args[0]
+        return None
+    if isinstance(entry, ast.Dict):
+        for k, v in zip(entry.keys, entry.values):
+            if isinstance(k, ast.Constant) and k.value == "pattern":
+                return v
+        return None
+    if isinstance(entry, ast.Tuple) and entry.elts:
+        return entry.elts[0]
+    return None
+
+
+def extract_optim_specs(mod: astutil.Module) -> List[OptimSpecLit]:
+    out: List[OptimSpecLit] = []
+    claimed: set = set()
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = astutil.call_name(node) or ""
+        if not name.endswith("OptimSpec.of"):
+            continue
+        rules: List[OptimRuleLit] = []
+        for entry in node.args:
+            if isinstance(entry, ast.Starred):
+                continue
+            claimed.add(id(entry))
+            pat = _optim_rule_pattern(entry)
+            if isinstance(pat, ast.Constant) and isinstance(
+                    pat.value, str):
+                rules.append(OptimRuleLit(pattern=pat.value,
+                                          line=entry.lineno,
+                                          col=entry.col_offset + 1))
+        if rules:
+            out.append(OptimSpecLit(mod=mod, node=node, rules=rules))
+    # standalone LayoutRule.of / LayoutRule calls outside OptimSpec.of
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or id(node) in claimed:
+            continue
+        name = astutil.call_name(node) or ""
+        if not (name.endswith("LayoutRule.of")
+                or name.endswith(".LayoutRule")
+                or name == "LayoutRule"):
+            continue
+        pat = _optim_rule_pattern(node)
+        if isinstance(pat, ast.Constant) and isinstance(pat.value, str):
+            out.append(OptimSpecLit(
+                mod=mod, node=node,
+                rules=[OptimRuleLit(pattern=pat.value, line=node.lineno,
+                                    col=node.col_offset + 1)]))
+    return out
+
+
+def check_optim_rules(specs: Iterable[OptimSpecLit],
+                      universe: ParamUniverse) -> List[Finding]:
+    """PT001/PT004 over optimizer layout rules vs the param-path
+    universe (first-match-wins precedence, same as policy rules)."""
+    all_paths: set = set()
+    for paths in universe.values():
+        all_paths.update(paths)
+    out: List[Finding] = []
+    for spec in specs:
+        mod = spec.mod
+        matched_before: set = set()
+        for rule in spec.rules:
+            matched = {p for p in all_paths
+                       if _matches(rule.pattern, p)}
+            if not matched:
+                out.append(Finding(
+                    rule="PT001", path=mod.path, line=rule.line,
+                    col=rule.col, symbol=spec.symbol,
+                    message=f"optimizer layout rule pattern "
+                            f"{rule.pattern!r} matches no parameter "
+                            f"path emitted by any registry architecture "
+                            f"(checked {len(universe)} configs, "
+                            f"{len(all_paths)} distinct paths): the "
+                            f"rule is dead and those leaves silently "
+                            f"stay dense-AdamW"))
+            elif matched <= matched_before:
+                out.append(Finding(
+                    rule="PT004", path=mod.path, line=rule.line,
+                    col=rule.col, symbol=spec.symbol,
+                    message=f"optimizer layout rule {rule.pattern!r} "
+                            f"is unreachable: every parameter path it "
+                            f"matches is claimed by an earlier rule "
+                            f"(first match wins)"))
+            matched_before |= matched
+    return out
+
+
+# ---------------------------------------------------------------------------
 # checks
 # ---------------------------------------------------------------------------
 
@@ -338,6 +502,16 @@ _SCHED_POS = {
 _CTRL_LEAVES = ("ESSProportional", "ConditionRate")
 _CTRL_DEFAULTS = {"levels": 7.0, "warmup": 3.0}
 _FIXED_DEFAULTS = {"b_min": 0.01, "b_max": 1.0}
+# RankSchedule / RankController defaults (repro.core.policy /
+# repro.core.controller): ranks behave exactly like budgets for PT008 —
+# plateau-quantized trajectories and hysteresis grids.
+_RANK_SCHED_DEFAULTS = {"start": 32.0, "end": 8.0, "begin_step": 0.0,
+                        "end_step": 0.0, "stages": 4.0}
+_RANK_SCHED_POS = {
+    "linear": ("start", "end", "begin_step", "end_step", "stages"),
+    "constant": ("end",),
+}
+_RANK_CTRL_DEFAULTS = {"levels": 4.0, "warmup": 3.0}
 _HORIZON_NAMES = ("steps", "num_steps", "total_steps", "train_steps",
                   "horizon", "max_steps")
 _EPS = 1e-9
@@ -453,6 +627,64 @@ def _budget_at(f: Dict[str, float], step: int) -> Optional[float]:
     return None                        # unknown kind string: skip
 
 
+def _rank_schedule_fields(mod: astutil.Module, call: ast.Call,
+                          scope: Optional[ast.AST]
+                          ) -> Optional[Dict[str, float]]:
+    """Resolved fields of a ``RankSchedule`` literal — classmethod or
+    raw constructor; None when any argument is dynamic."""
+    name = astutil.call_name(call) or ""
+    parts = name.rsplit(".", 2)
+    leaf = parts[-1]
+    if leaf in _RANK_SCHED_POS and len(parts) > 1 \
+            and parts[-2] == "RankSchedule":
+        fields = _call_fields(mod, call, scope, _RANK_SCHED_POS[leaf],
+                              _RANK_SCHED_DEFAULTS)
+        if fields is None:
+            return None
+        fields["kind"] = leaf          # type: ignore[assignment]
+        return fields
+    if leaf == "RankSchedule":
+        kind = "constant"
+        kind_expr: Optional[ast.expr] = (
+            call.args[0] if call.args else astutil.keyword_arg(
+                call, "kind"))
+        if kind_expr is not None:
+            kind_expr = _resolve_name(mod, kind_expr, scope)
+            if not (isinstance(kind_expr, ast.Constant)
+                    and isinstance(kind_expr.value, str)):
+                return None
+            kind = kind_expr.value
+        fields = _call_fields(
+            mod, ast.Call(func=call.func, args=call.args[1:],
+                          keywords=call.keywords),
+            scope, ("start", "end", "begin_step", "end_step", "stages"),
+            _RANK_SCHED_DEFAULTS)
+        if fields is None:
+            return None
+        fields["kind"] = kind          # type: ignore[assignment]
+        return fields
+    return None
+
+
+def _rank_at(f: Dict[str, float], step: int) -> Optional[int]:
+    """Mirror of ``RankSchedule.rank_at`` over resolved fields."""
+    kind = f["kind"]
+    if kind == "constant":
+        return max(int(f["end"]), 1)
+    if kind == "linear":
+        if step <= f["begin_step"]:
+            return max(int(f["start"]), 1)
+        if step >= f["end_step"]:
+            return max(int(f["end"]), 1)
+        frac = (step - f["begin_step"]) / (f["end_step"]
+                                           - f["begin_step"])
+        stages = max(int(f["stages"]), 1)
+        frac = min(int(frac * stages) + 1, stages) / stages
+        return max(int(round(f["start"] * (1.0 - frac)
+                             + f["end"] * frac)), 1)
+    return None                        # unknown kind string: skip
+
+
 def _module_horizon(mod: astutil.Module) -> Optional[int]:
     """Declared step horizon: the max of int-literal ``steps=`` call
     keywords (``RunSpec(steps=200)``, ``run.fit(steps=50)``) and
@@ -550,12 +782,46 @@ def _check_fixed_schedule(mod: astutil.Module, node: ast.Call,
         f"configured end")]
 
 
+def _check_rank_schedule_literal(mod: astutil.Module, node: ast.Call,
+                                 f: Dict[str, float],
+                                 horizon: Optional[int]
+                                 ) -> List[Finding]:
+    out: List[Finding] = []
+    if f["kind"] == "linear" and f["end_step"] <= f["begin_step"]:
+        out.append(_pt008(
+            mod, node,
+            f"linear rank schedule with end_step="
+            f"{int(f['end_step'])} <= begin_step="
+            f"{int(f['begin_step'])} never anneals: the constructor "
+            f"raises (or the raw dataclass divides by zero at the "
+            f"first post-begin step)"))
+        return out
+    if horizon is None or f["kind"] == "constant":
+        return out
+    final = _rank_at(f, horizon)
+    end = max(int(f["end"]), 1)
+    if final is None or final == end:
+        return out
+    out.append(_pt008(
+        mod, node,
+        f"rank anneal to end_step={int(f['end_step'])} plateaus at "
+        f"rank {final} by the declared horizon of {horizon} steps — "
+        f"the run finishes short of the configured end rank {end}; "
+        f"the optimizer-state memory the layout promises is never "
+        f"realized (shrink end_step / begin_step or raise the "
+        f"horizon)"))
+    return out
+
+
 def _check_grid_controller(mod: astutil.Module, node: ast.Call,
                            scope: Optional[ast.AST],
-                           horizon: Optional[int]) -> List[Finding]:
+                           horizon: Optional[int],
+                           defaults: Optional[Dict[str, float]] = None
+                           ) -> List[Finding]:
     if horizon is None:
         return []
-    fields = _call_fields(mod, node, scope, (), _CTRL_DEFAULTS)
+    fields = _call_fields(mod, node, scope, (),
+                          defaults or _CTRL_DEFAULTS)
     if fields is None:
         return []
     levels = max(int(fields["levels"]), 2)
@@ -590,6 +856,16 @@ def check_schedules(modules: Iterable[astutil.Module]) -> List[Finding]:
                 out.extend(_check_grid_controller(mod, node, scope,
                                                   horizon))
                 continue
+            if leaf == "RankController":
+                out.extend(_check_grid_controller(
+                    mod, node, scope, horizon,
+                    defaults=_RANK_CTRL_DEFAULTS))
+                continue
+            rf = _rank_schedule_fields(mod, node, scope)
+            if rf is not None:
+                out.extend(_check_rank_schedule_literal(mod, node, rf,
+                                                        horizon))
+                continue
             f = _schedule_fields(mod, node, scope)
             if f is not None:
                 out.extend(_check_schedule_literal(mod, node, f,
@@ -598,15 +874,22 @@ def check_schedules(modules: Iterable[astutil.Module]) -> List[Finding]:
 
 
 def check(modules: Iterable[astutil.Module],
-          universe: Optional[TagUniverse] = None) -> List[Finding]:
+          universe: Optional[TagUniverse] = None,
+          param_universe: Optional[ParamUniverse] = None
+          ) -> List[Finding]:
     mods = list(modules)
     out = check_schedules(mods)
     policies: List[PolicyLit] = []
+    optim_specs: List[OptimSpecLit] = []
     for mod in mods:
         policies.extend(extract_policies(mod))
-    if not policies:
-        return out
-    if universe is None:
-        universe = tag_universe()
-    out.extend(check_policies(policies, universe))
+        optim_specs.extend(extract_optim_specs(mod))
+    if policies:
+        if universe is None:
+            universe = tag_universe()
+        out.extend(check_policies(policies, universe))
+    if optim_specs:
+        if param_universe is None:
+            param_universe = param_path_universe()
+        out.extend(check_optim_rules(optim_specs, param_universe))
     return out

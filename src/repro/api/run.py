@@ -26,13 +26,14 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import optim as optim_lib
 from repro.api.spec import RunSpec
 from repro.configs import get_config
 from repro.launch import mesh as mesh_lib
 from repro.launch import report as report_lib
 from repro.launch import train_steps
 from repro.models import registry
-from repro.train import checkpoint, znorm
+from repro.train import checkpoint, optim as adamw_lib, znorm
 
 
 class Run:
@@ -81,7 +82,9 @@ class Run:
                 self.cfg, jax.random.PRNGKey(self.spec.seed),
                 znorm_tags=self.tags if self.use_znorm_cache else None,
                 n_dataset=self.spec.data.n_samples,
-                budget_stats=self.track_budget_stats)
+                budget_stats=self.track_budget_stats,
+                opt=self.spec.optimizer,
+                opt_ranks=self.schedule_state.ranks or None)
             self.state = self._shard(self.state)
         return self
 
@@ -93,12 +96,14 @@ class Run:
                                                self.mesh)
         return jax.device_put(state, sh)
 
-    def _abstract_state(self):
+    def _abstract_state(self, opt=None, opt_ranks=None):
         state, _ = train_steps.abstract_train_state(
             self.cfg,
             znorm_tags=self.tags if self.use_znorm_cache else None,
             n_dataset=self.spec.data.n_samples,
-            budget_stats=self.track_budget_stats)
+            budget_stats=self.track_budget_stats,
+            opt=self.spec.optimizer if opt is None else opt,
+            opt_ranks=opt_ranks)
         return state
 
     @property
@@ -184,9 +189,14 @@ class Run:
     def _run_state_metadata(self) -> dict:
         # snapshot history: the async checkpointer serializes on a
         # worker thread while fit() keeps appending to the live list
+        opt = self.spec.optimizer
+        layouts = (list(opt.layouts_used())
+                   if isinstance(opt, optim_lib.OptimSpec)
+                   else ["adamw"])
         return checkpoint.pack_run_state(
             self.schedule_state.to_json(),
             arch=self.spec.arch,
+            optim_layouts=layouts,
             history=[dict(h) for h in self.history])
 
     def save(self, block: bool = True) -> None:
@@ -217,20 +227,73 @@ class Run:
         params, optimizer, znorm cache, budget statistics, metrics
         history AND the scheduled driver's controller band state — the
         budget trajectory continues instead of resetting to every
-        controller's ``initial_budget``."""
+        controller's ``initial_budget``.
+
+        Optimizer-state compatibility: the manifest records which
+        layouts wrote the checkpoint.  A legacy dense-AdamW checkpoint
+        restores under an all-dense ``OptimSpec`` (converted in place);
+        any other mismatch — unknown layout names, factored/low-rank
+        spec against a dense checkpoint or vice versa — fails with an
+        explicit error instead of a pytree-structure crash."""
         if not spec.checkpoint_dir:
             raise ValueError("RunSpec.checkpoint_dir is not set")
         run = cls(spec)
-        state, step = checkpoint.restore(spec.checkpoint_dir,
-                                         run._abstract_state(), step=step)
-        run.state = run._shard(state)
-        rec = checkpoint.unpack_run_state(
-            checkpoint.read_manifest(spec.checkpoint_dir, step))
+        if step is None:
+            step = checkpoint.latest_step(spec.checkpoint_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoints under {spec.checkpoint_dir}")
+        manifest = checkpoint.read_manifest(spec.checkpoint_dir, step)
+        rec = checkpoint.unpack_run_state(manifest)
         if rec is not None:
             if "schedule_state" in rec:
                 run.schedule_state = train_steps.ScheduleState.from_json(
                     rec["schedule_state"])
             run.history = [dict(h) for h in rec.get("history", [])]
+            unknown = [l for l in rec.get("optim_layouts", [])
+                       if l not in optim_lib.KNOWN_LAYOUTS + ("adamw",)]
+            if unknown:
+                raise ValueError(
+                    f"checkpoint step {step} was written with unknown "
+                    f"optimizer-state layout(s) {unknown}; this reader "
+                    f"knows {sorted(optim_lib.KNOWN_LAYOUTS)} (plus "
+                    f"legacy 'adamw').  Upgrade repro to restore it.")
+        # dense-AdamW checkpoints key their moments as opt/m/...; the
+        # layout subsystem keys opt/leaves/<path>/<slot> ("opt/count"
+        # exists in both, so it cannot discriminate)
+        keys = manifest.get("keys", ())
+        legacy_ckpt = (any(k.startswith(("opt/m/", "opt/v/"))
+                           for k in keys)
+                       and not any(k.startswith("opt/leaves/")
+                                   for k in keys))
+        spec_opt = spec.optimizer
+        if legacy_ckpt and isinstance(spec_opt, optim_lib.OptimSpec):
+            if not spec_opt.all_dense:
+                raise ValueError(
+                    f"checkpoint step {step} holds legacy dense-AdamW "
+                    f"optimizer state but the spec's OptimSpec resolves "
+                    f"to {spec_opt.layouts_used()}; factored/low-rank "
+                    f"moments cannot be reconstructed from dense ones. "
+                    f"Restore with an all-dense spec (or AdamWConfig) "
+                    f"and switch layouts on a fresh run.")
+            template = run._abstract_state(opt=adamw_lib.AdamWConfig())
+            state, step = checkpoint.restore(spec.checkpoint_dir,
+                                             template, step=step)
+            state["opt"] = optim_lib.from_legacy_adamw(state["opt"],
+                                                       state["params"])
+        elif not legacy_ckpt and not isinstance(spec_opt,
+                                                optim_lib.OptimSpec):
+            raise ValueError(
+                f"checkpoint step {step} was written by an OptimSpec "
+                f"(path-keyed optimizer state) but the spec carries a "
+                f"legacy AdamWConfig; restore with "
+                f"OptimSpec.from_adamw(cfg) to keep the layouts.")
+        else:
+            template = run._abstract_state(
+                opt_ranks=run.schedule_state.ranks or None)
+            state, step = checkpoint.restore(spec.checkpoint_dir,
+                                             template, step=step)
+        run.state = run._shard(state)
         return run
 
     @classmethod
@@ -366,12 +429,20 @@ class Run:
 
     def report(self) -> str:
         """Markdown report: §Run metrics summary, §Budgets controller
-        trajectory + re-plan economy, §Roofline (when ``dryrun`` ran)."""
+        trajectory + re-plan economy, §Optimizer memory (OptimSpec
+        runs), §Roofline (when ``dryrun`` ran)."""
         n_steps = int(self.state["step"]) if self.state is not None else 0
         n_compiles = (len(self._step_fn.compiled)
                       if self._step_fn is not None else 0)
+        optim_rec = None
+        if isinstance(self.spec.optimizer, optim_lib.OptimSpec):
+            params, _ = registry.abstract_params(self.cfg)
+            optim_rec = optim_lib.memory_report(
+                self.spec.optimizer, params,
+                ranks=self.schedule_state.ranks or None)
         return report_lib.run_report(
             n_steps=n_steps,
             budget_records=self.schedule_state.trajectory,
             n_compiles=n_compiles, history=self.history,
-            roofline_rec=self._dryrun_rec)
+            roofline_rec=self._dryrun_rec, optim_rec=optim_rec,
+            rank_records=self.schedule_state.rank_trajectory)

@@ -17,11 +17,12 @@ public and documented for callers that need the low level.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 from repro.core.kernel_config import KernelConfig
 from repro.core.policy import PolicyRules  # noqa: F401  (re-export conv.)
 from repro.models import common as cm
+from repro.optim import OptimSpec
 from repro.serve.spec import ServeSpec  # noqa: F401  (re-export conv.)
 from repro.train import data as data_lib
 from repro.train import optim, znorm
@@ -97,7 +98,10 @@ class RunSpec:
     batch_size: int = 8
     microbatches: int = 1
 
-    optimizer: optim.AdamWConfig = optim.AdamWConfig()
+    # a legacy AdamWConfig (dense AdamWState, the bit-identical
+    # default) or an repro.optim.OptimSpec (per-leaf factored/low-rank
+    # state layouts with policy-driven rank control)
+    optimizer: Union[optim.AdamWConfig, OptimSpec] = optim.AdamWConfig()
     lr: float = 3e-3
     lr_schedule: str = "constant"
     warmup: int = 5

@@ -9,7 +9,8 @@ from repro.core import estimators_extra as _estimators_extra  # noqa: F401
 from repro.core.config import (EXACT_CONFIG, EstimatorKind, NormSource,
                                WTACRSConfig)
 from repro.core.controller import (BudgetController, ConditionRate,
-                                   ESSProportional, FixedSchedule, TagStats)
+                                   ESSProportional, FixedSchedule,
+                                   RankController, TagStats)
 from repro.core.estimator_registry import (EstimatorSpec, get_estimator,
                                            register_estimator,
                                            registered_estimators)
@@ -23,7 +24,8 @@ from repro.core.lora import LoRAConfig, init_lora_params, lora_linear
 from repro.core.plans import (SamplePlan, build_plan,
                               column_row_probabilities, crs_plan,
                               det_topk_plan, optimal_c_size, wtacrs_plan)
-from repro.core.policy import BudgetSchedule, PolicyRules, Rule
+from repro.core.policy import (BudgetSchedule, PolicyRules, RankSchedule,
+                               Rule)
 
 __all__ = [
     "EstimatorKind", "NormSource", "WTACRSConfig", "EXACT_CONFIG",
@@ -36,7 +38,7 @@ __all__ = [
     "empirical_estimator_stats",
     "wtacrs_linear", "wtacrs_linear_shared", "read_grad_norm_tap",
     "LoRAConfig", "init_lora_params", "lora_linear",
-    "BudgetSchedule", "PolicyRules", "Rule",
+    "BudgetSchedule", "PolicyRules", "RankSchedule", "Rule",
     "BudgetController", "ConditionRate", "ESSProportional", "FixedSchedule",
-    "TagStats",
+    "RankController", "TagStats",
 ]

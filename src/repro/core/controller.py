@@ -205,6 +205,92 @@ class _StatsController(_GridController):
 
 
 @dataclasses.dataclass(frozen=True)
+class RankController:
+    """Hysteresis-banded integer rank grid for low-rank optimizer-state
+    layouts (``repro.optim.LayoutRule``), riding the
+    :class:`BudgetController` protocol — ``initial_budget``/``propose``
+    with the "budget" being the projection rank.
+
+    Statistics arrive through the same ``budget_stats`` state the budget
+    controllers read, under the optimizer's per-rule keys
+    (``repro.optim.rank_stat_key``): the ``ess`` slot carries the
+    captured-energy fraction ``||P^T g||^2 / ||g||^2`` the low-rank
+    update measures every step (AdaRankGrad's residual criterion).  When
+    the subspace captures almost everything (``> hi``) the rank steps
+    DOWN one grid level; when too much gradient energy escapes
+    (``< lo``) it steps UP.  Inside [lo, hi] the rank holds — the band
+    IS the hysteresis, so an oscillating energy reading never re-plans.
+    Ranks fix static projection/moment shapes, so every move is one
+    recompile per plateau through the signature-keyed compile cache,
+    exactly like budgets.
+    """
+
+    r_min: int = 4
+    r_max: int = 32
+    levels: int = 4
+    warmup: int = 3
+    lo: float = 0.70
+    hi: float = 0.97
+
+    needs_stats = True      # class attr, not a field: driver metadata
+
+    def __post_init__(self):
+        if not (1 <= self.r_min <= self.r_max):
+            raise ValueError(f"need 1 <= r_min <= r_max, "
+                             f"got [{self.r_min}, {self.r_max}]")
+        if self.levels < 2:
+            raise ValueError("need levels >= 2")
+        if self.warmup < 0:
+            raise ValueError("need warmup >= 0")
+        if not (0.0 <= self.lo < self.hi <= 1.0):
+            raise ValueError(f"need 0 <= lo < hi <= 1, "
+                             f"got [{self.lo}, {self.hi}]")
+
+    # protocol-compat bounds (budgets ARE ranks here)
+    @property
+    def b_min(self) -> float:
+        return float(self.r_min)
+
+    @property
+    def b_max(self) -> float:
+        return float(self.r_max)
+
+    def grid(self) -> Tuple[int, ...]:
+        n = self.levels
+        out: list = []
+        for i in range(n):
+            r = int(round(self.r_min
+                          + (self.r_max - self.r_min) * i / (n - 1)))
+            if not out or r > out[-1]:
+                out.append(r)
+        return tuple(out)
+
+    def nearest_level(self, rank: float) -> int:
+        g = self.grid()
+        return min(range(len(g)), key=lambda i: abs(g[i] - rank))
+
+    def initial_budget(self, config_budget: Optional[float]) -> int:
+        """Snap the rule's static rank onto the grid (protocol name;
+        the value is an integer rank)."""
+        base = self.r_max if config_budget is None else config_budget
+        base = min(max(int(round(base)), self.r_min), self.r_max)
+        return self.grid()[self.nearest_level(base)]
+
+    def propose(self, stats: Optional[TagStats], budget: float,
+                step: int) -> int:
+        g = self.grid()
+        j = self.nearest_level(budget)
+        if stats is None or stats.count < 1 or stats.count < self.warmup:
+            return g[j]
+        energy = stats.ess        # captured-energy fraction (see docstring)
+        if energy > self.hi and j > 0:
+            return g[j - 1]
+        if energy < self.lo and j < len(g) - 1:
+            return g[j + 1]
+        return g[j]
+
+
+@dataclasses.dataclass(frozen=True)
 class ESSProportional(_StatsController):
     """Budget proportional to the effective-sample-size fraction.
 

@@ -71,13 +71,53 @@ def budget_report_from_step_fn(step_fn, n_steps: int) -> str:
                          len(step_fn.compiled))
 
 
+def rank_trajectory_table(records: List[dict]) -> str:
+    """Markdown table over the driver's optimizer-rank trajectory
+    (``ScheduleState.rank_trajectory``); initial pins render as
+    `init`."""
+    hdr = ("| step | rule | pattern | rank | prev |\n"
+           "|---|---|---|---|---|\n")
+    out = []
+    for r in records:
+        prev = "init" if r.get("prev") is None else str(r["prev"])
+        out.append(f"| {r['step']} | {r['rule']} | `{r['pattern']}` "
+                   f"| {r['rank']} | {prev} |")
+    return hdr + "\n".join(out) + ("\n" if out else "")
+
+
+def optimizer_memory_report(optim_rec: dict,
+                            rank_records: List[dict] = None) -> str:
+    """§Optimizer memory section: the per-layout state-byte table from
+    ``repro.optim.memory_report`` plus the rank trajectory when the
+    run drives ranks dynamically."""
+    parts = ["## §Optimizer memory\n"]
+    parts.append(
+        f"{optim_rec['state_bytes'] / 2**20:.2f} MiB optimizer state "
+        f"vs {optim_rec['dense_bytes'] / 2**20:.2f} MiB dense AdamW "
+        f"(**{optim_rec['ratio']:.2f}x** reduction).\n")
+    hdr = ("| layout | leaves | params | state bytes | dense bytes | "
+           "ratio |\n|---|---|---|---|---|---|\n")
+    rows = []
+    for r in optim_rec["rows"]:
+        ratio = r["dense_bytes"] / max(r["state_bytes"], 1)
+        rows.append(f"| {r['layout']} | {r['leaves']} | {r['params']} "
+                    f"| {r['state_bytes']} | {r['dense_bytes']} "
+                    f"| {ratio:.2f}x |")
+    parts.append(hdr + "\n".join(rows) + "\n")
+    if rank_records:
+        parts.append(rank_trajectory_table(rank_records))
+    return "\n".join(parts)
+
+
 def run_report(*, n_steps: int, budget_records: List[dict],
                n_compiles: int, history: List[dict] = None,
-               roofline_rec: dict = None) -> str:
+               roofline_rec: dict = None, optim_rec: dict = None,
+               rank_records: List[dict] = None) -> str:
     """One markdown report for a façade run (``repro.api.Run.report``):
     a §Run summary over the metrics history, the §Budgets controller
-    trajectory, and — when the run did a dry-run lowering — the
-    §Roofline terms of its cell."""
+    trajectory, §Optimizer memory when the run carries an OptimSpec,
+    and — when the run did a dry-run lowering — the §Roofline terms of
+    its cell."""
     parts = ["## §Run\n"]
     if history:
         losses = [h["loss"] for h in history if "loss" in h]
@@ -89,6 +129,10 @@ def run_report(*, n_steps: int, budget_records: List[dict],
     else:
         parts.append(f"{n_steps} steps (no metrics recorded).\n")
     parts.append(budget_report(budget_records, n_steps, n_compiles))
+    if optim_rec is not None:
+        parts.append("")
+        parts.append(optimizer_memory_report(optim_rec,
+                                             rank_records=rank_records))
     if roofline_rec is not None and roofline_rec.get("status") == "ok":
         rt = roofline.roofline_terms(roofline_rec)
         parts.append(

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro import optim as optim_lib
+from repro.optim import update as optim_state_update
 from repro.core import controller as controller_lib
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as shard_lib
@@ -25,14 +27,24 @@ from repro.train import compression, optim, znorm
 
 def init_train_state(cfg: ArchConfig, key: jax.Array,
                      znorm_tags=None, n_dataset: int = 0,
-                     budget_stats: bool = False) -> Dict[str, Any]:
+                     budget_stats: bool = False,
+                     opt=None, opt_ranks=None) -> Dict[str, Any]:
     """``budget_stats``: also track the per-tag controller statistics
     (only useful — and only paid for — when the policy carries adaptive
-    budget controllers; see ``repro.core.controller``)."""
+    budget controllers; see ``repro.core.controller``).
+
+    ``opt``: ``None``/``AdamWConfig`` keeps the legacy dense
+    ``AdamWState``; an ``repro.optim.OptimSpec`` initializes the
+    path-keyed layout state (its rank-controller statistics ride
+    ``budget_stats`` regardless of the znorm flags — they come from the
+    optimizer update, not the znorm tap).  ``opt_ranks``: current rank
+    per dynamic rule (a resumed driver's band positions)."""
     params, _ = registry.init_params(cfg, key)
+    legacy = opt is None or isinstance(opt, optim.AdamWConfig)
     state = {
         "params": params,
-        "opt": optim.adamw_init(params),
+        "opt": (optim.adamw_init(params) if legacy
+                else optim_lib.init(opt, params, ranks=opt_ranks)),
         "step": jnp.zeros((), jnp.int32),
         "base_key": jax.random.key_data(jax.random.fold_in(key, 7)),
     }
@@ -40,17 +52,26 @@ def init_train_state(cfg: ArchConfig, key: jax.Array,
         state["znorm"] = znorm.init_cache(cfg, znorm_tags, n_dataset)
         if budget_stats:
             state["budget_stats"] = znorm.init_stats(znorm_tags)
+    if not legacy:
+        rank_stats = optim_lib.init_rank_stats(opt)
+        if rank_stats:
+            state.setdefault("budget_stats", {}).update(rank_stats)
     return state
 
 
 def abstract_train_state(cfg: ArchConfig, znorm_tags=None,
-                         n_dataset: int = 0, budget_stats: bool = False):
+                         n_dataset: int = 0, budget_stats: bool = False,
+                         opt=None, opt_ranks=None):
     """(ShapeDtypeStructs, logical axes info) without allocation."""
     params, axes = registry.abstract_params(cfg)
-    opt = jax.eval_shape(optim.adamw_init, params)
+    legacy = opt is None or isinstance(opt, optim.AdamWConfig)
+    opt_abs = (jax.eval_shape(optim.adamw_init, params) if legacy
+               else jax.eval_shape(
+                   lambda p: optim_lib.init(opt, p, ranks=opt_ranks),
+                   params))
     state = {
         "params": params,
-        "opt": opt,
+        "opt": opt_abs,
         "step": jax.ShapeDtypeStruct((), jnp.int32),
         "base_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
     }
@@ -62,6 +83,12 @@ def abstract_train_state(cfg: ArchConfig, znorm_tags=None,
             state["budget_stats"] = {
                 t: jax.ShapeDtypeStruct((znorm.N_STATS,), jnp.float32)
                 for t in znorm_tags}
+    if not legacy:
+        rank_keys = opt.rank_stat_keys()
+        if rank_keys:
+            state.setdefault("budget_stats", {}).update({
+                k: jax.ShapeDtypeStruct((znorm.N_STATS,), jnp.float32)
+                for k in rank_keys})
     return state, axes
 
 
@@ -73,7 +100,10 @@ def train_state_shardings(cfg, state, axes, mesh):
     rep = shard_lib.replicated(mesh)
     sh = {
         "params": p_sh,
-        "opt": optim.AdamWState(rep, p_sh, p_sh),
+        "opt": (optim.AdamWState(rep, p_sh, p_sh)
+                if isinstance(state["opt"], optim.AdamWState)
+                else optim_lib.state_shardings(
+                    state["opt"], state["params"], p_sh, rep)),
         "step": rep,
         "base_key": rep,
     }
@@ -85,12 +115,17 @@ def train_state_shardings(cfg, state, axes, mesh):
 
 
 def make_train_step(cfg: ArchConfig, policy: cm.Policy,
-                    opt_cfg: optim.AdamWConfig,
+                    opt_cfg,
                     schedule: Callable[[jax.Array], jax.Array],
                     use_znorm_cache: bool = False,
                     microbatches: int = 1,
                     data_axes: Optional[tuple] = None):
     """(state, batch) -> (state, metrics).  Paper-faithful WTA-CRS step.
+
+    ``opt_cfg``: a legacy ``optim.AdamWConfig`` (dense ``AdamWState``,
+    unchanged) or an ``repro.optim.OptimSpec`` (path-keyed layout
+    state; rank-controller statistics land in
+    ``state["budget_stats"]`` under ``optim:rank:*`` keys).
 
     With ``use_znorm_cache`` the batch must carry ``sample_ids`` and the
     state a ``znorm`` cache; gradient-norm taps refresh it every step
@@ -113,6 +148,10 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
     making every device compute multiple shards' tokens (measured 8x FLOP
     inflation on the 16x16 mesh).
     """
+    # static per-build: the update only reports captured-energy stats
+    # when the spec carries rank-controller rules
+    track_rank_energy = (isinstance(opt_cfg, optim_lib.OptimSpec)
+                         and bool(opt_cfg.controller_rule_indices()))
 
     def loss_with_znorms(params, znorms, batch, key):
         return registry.loss_fn(cfg, params, batch, policy, key=key,
@@ -202,7 +241,8 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
                         t: jnp.moveaxis(y, 0, 1).reshape(y.shape[1], -1)
                         for t, y in taps.items()}
                     budgets = {t: policy.config_for(t).budget
-                               for t in state["budget_stats"]}
+                               for t in state["budget_stats"]
+                               if not optim_lib.is_rank_stat_key(t)}
                     new_stats = znorm.update_stats(
                         state["budget_stats"], tap_full, budgets,
                         active_tags=active)
@@ -221,8 +261,13 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
             aux, gz = {}, None
 
         lr = schedule(step)
-        new_params, new_opt, om = optim.adamw_update(
-            gp, state["opt"], params, lr, opt_cfg)
+        if isinstance(opt_cfg, optim_lib.OptimSpec):
+            new_params, new_opt, om, rank_energy = optim_state_update(
+                gp, state["opt"], params, lr, opt_cfg)
+        else:
+            new_params, new_opt, om = optim.adamw_update(
+                gp, state["opt"], params, lr, opt_cfg)
+            rank_energy = {}
         new_state = dict(state, params=new_params, opt=new_opt,
                          step=step + 1)
         if use_znorm_cache and microbatches > 1:
@@ -241,10 +286,14 @@ def make_train_step(cfg: ArchConfig, policy: cm.Policy,
                 # resolved budgets are static per compile, like the
                 # shapes they produce
                 budgets = {t: policy.config_for(t).budget
-                           for t in state["budget_stats"]}
+                           for t in state["budget_stats"]
+                           if not optim_lib.is_rank_stat_key(t)}
                 new_state["budget_stats"] = znorm.update_stats(
                     state["budget_stats"], gz, budgets,
                     active_tags=active)
+        if track_rank_energy and "budget_stats" in new_state:
+            new_state["budget_stats"] = optim_lib.update_rank_stats(
+                new_state["budget_stats"], rank_energy)
         metrics = {"loss": loss, "lr": lr, **om}
         return new_state, metrics
 
@@ -266,23 +315,31 @@ class ScheduleState:
     (``repro.train.checkpoint.pack_run_state``).
     """
 
-    VERSION = 1
+    VERSION = 2
 
     budgets: Dict[int, float] = dataclasses.field(default_factory=dict)
     replans: int = 0
     trajectory: List[dict] = dataclasses.field(default_factory=list)
+    # v2: optimizer-rank band positions (rank per dynamic OptimSpec
+    # rule) + their trajectory — empty for AdamWConfig / static specs
+    ranks: Dict[int, int] = dataclasses.field(default_factory=dict)
+    rank_trajectory: List[dict] = dataclasses.field(default_factory=list)
 
     def to_json(self) -> dict:
         return {"version": self.VERSION,
                 "budgets": {str(i): float(b)
                             for i, b in self.budgets.items()},
                 "replans": int(self.replans),
-                "trajectory": [dict(r) for r in self.trajectory]}
+                "trajectory": [dict(r) for r in self.trajectory],
+                "ranks": {str(i): int(r)
+                          for i, r in self.ranks.items()},
+                "rank_trajectory": [dict(r)
+                                    for r in self.rank_trajectory]}
 
     @classmethod
     def from_json(cls, d: dict) -> "ScheduleState":
         v = d.get("version")
-        if v != cls.VERSION:
+        if v not in (1, cls.VERSION):
             raise ValueError(
                 f"schedule-state record version {v!r} is not "
                 f"{cls.VERSION}; this checkpoint was written by an "
@@ -290,7 +347,11 @@ class ScheduleState:
         return cls(budgets={int(i): float(b)
                             for i, b in d["budgets"].items()},
                    replans=int(d["replans"]),
-                   trajectory=[dict(r) for r in d["trajectory"]])
+                   trajectory=[dict(r) for r in d["trajectory"]],
+                   ranks={int(i): int(r)
+                          for i, r in d.get("ranks", {}).items()},
+                   rank_trajectory=[dict(r) for r
+                                    in d.get("rank_trajectory", [])])
 
 
 class ScheduledStepFn:
@@ -328,7 +389,7 @@ class ScheduledStepFn:
     """
 
     def __init__(self, cfg: ArchConfig, policy: cm.Policy,
-                 opt_cfg: optim.AdamWConfig,
+                 opt_cfg,
                  schedule: Callable[[jax.Array], jax.Array],
                  jit: bool = True,
                  schedule_state: Optional[ScheduleState] = None,
@@ -383,6 +444,26 @@ class ScheduledStepFn:
         # structure, so resolve once.
         self.owned_tags: Dict[int, list] = {}
 
+        # --- optimizer rank dynamics (repro.optim.OptimSpec) ---------
+        self._opt_spec = (opt_cfg
+                          if isinstance(opt_cfg, optim_lib.OptimSpec)
+                          else None)
+        spec = self._opt_spec
+        self._rank_dyn = (spec.dynamic_rule_indices()
+                          if spec is not None else ())
+        self._rank_ctrl = (spec.controller_rule_indices()
+                           if spec is not None else ())
+        if not self.schedule_state.ranks:
+            if self._rank_dyn:
+                self.schedule_state.ranks = dict(spec.initial_ranks())
+        elif set(self.schedule_state.ranks) != set(self._rank_dyn):
+            raise ValueError(
+                f"restored schedule state pins ranks for optimizer "
+                f"rules {sorted(self.schedule_state.ranks)} but the "
+                f"spec's dynamic rank rules are "
+                f"{sorted(self._rank_dyn)}; the optimizer spec changed "
+                f"between save and restore")
+
     @property
     def replans(self) -> int:
         return self.schedule_state.replans
@@ -406,6 +487,10 @@ class ScheduledStepFn:
         step = int(state["step"])
         st = self.schedule_state
         rule_budgets = None
+        stats_host = None
+        if (self._ctrl_idx and self._stats_needed) or self._rank_ctrl:
+            stats_host = (jax.device_get(state["budget_stats"])
+                          if "budget_stats" in state else {})
         if self._ctrl_idx:
             if self._stats_needed and "budget_stats" not in state:
                 raise ValueError(
@@ -415,9 +500,12 @@ class ScheduledStepFn:
                     "budget_stats=True (the controllers feed on the "
                     "znorm cache's tap statistics) and pass "
                     "use_znorm_cache=True")
-            stats_host = (jax.device_get(state["budget_stats"])
-                          if "budget_stats" in state else {})
-            owned = self._owned(stats_host.keys())
+            if stats_host is None:
+                stats_host = (jax.device_get(state["budget_stats"])
+                              if "budget_stats" in state else {})
+            owned = self._owned(
+                [t for t in stats_host
+                 if not optim_lib.is_rank_stat_key(t)])
             for i in self._ctrl_idx:
                 r = self._rules[i]
                 agg = controller_lib.TagStats.aggregate(stats_host,
@@ -438,10 +526,13 @@ class ScheduledStepFn:
                     st.budgets[i] = nb
             rule_budgets = tuple(st.budgets.get(i)
                                  for i in range(len(self._rules)))
+        state = self._apply_rank_dynamics(state, step, stats_host)
         pol = self._policy.at_step(step)
         if rule_budgets is not None:
             pol = pol.with_rule_budgets(rule_budgets)
         sig = pol.schedule_signature()
+        if st.ranks:
+            sig = sig + tuple(sorted(st.ranks.items()))
         fn = self.compiled.get(sig)
         if fn is None:
             fn = make_train_step(self._cfg, pol, self._opt_cfg,
@@ -452,9 +543,44 @@ class ScheduledStepFn:
             self.compiled[sig] = fn
         return fn(state, batch)
 
+    def _apply_rank_dynamics(self, state, step: int, stats_host):
+        """Resolve rank schedules/controllers at the concrete step and
+        migrate the optimizer state on band crossings (pad/truncate
+        the low-rank subspaces; one recompile per change through the
+        signature-keyed cache, exactly like a budget re-plan)."""
+        if not self._rank_dyn:
+            return state
+        spec, st = self._opt_spec, self.schedule_state
+        changed: Dict[int, int] = {}
+        for i in self._rank_dyn:
+            rule = spec.rules[i]
+            if rule.schedule is not None:
+                want = int(rule.schedule.rank_at(step))
+            else:
+                vec = (stats_host or {}).get(optim_lib.rank_stat_key(i))
+                agg = (controller_lib.TagStats.from_vector(vec)
+                       if vec is not None else None)
+                want = int(rule.controller.propose(agg, st.ranks[i],
+                                                   step))
+            if not any(rec["rule"] == i for rec in st.rank_trajectory):
+                st.rank_trajectory.append(
+                    {"step": step, "rule": i, "pattern": rule.pattern,
+                     "rank": st.ranks[i], "prev": None})
+            if want != st.ranks[i]:
+                st.replans += 1
+                st.rank_trajectory.append(
+                    {"step": step, "rule": i, "pattern": rule.pattern,
+                     "rank": want, "prev": st.ranks[i]})
+                changed[i] = want
+                st.ranks[i] = want
+        if changed:
+            state = dict(state, opt=optim_lib.migrate_ranks(
+                spec, state["opt"], state["params"], changed))
+        return state
+
 
 def make_scheduled_train_step(cfg: ArchConfig, policy: cm.Policy,
-                              opt_cfg: optim.AdamWConfig,
+                              opt_cfg,
                               schedule: Callable[[jax.Array], jax.Array],
                               jit: bool = True,
                               schedule_state: Optional[ScheduleState] = None,
@@ -608,7 +734,7 @@ def make_slot_reset_step(cfg: ArchConfig):
 # ---------------------------------------------------------------------------
 
 def make_shardmap_dp_step(cfg: ArchConfig, policy: cm.Policy,
-                          opt_cfg: optim.AdamWConfig,
+                          opt_cfg,
                           schedule, mesh,
                           compress: compression.Mode = "none"):
     """Pure data-parallel step with the gradient reduction written out
@@ -633,8 +759,12 @@ def make_shardmap_dp_step(cfg: ArchConfig, policy: cm.Policy,
         gp = compression.pmean_tree(gp, dp, compress)
         loss = jax.lax.pmean(loss, dp)
         lr = schedule(state["step"])
-        new_params, new_opt, om = optim.adamw_update(
-            gp, state["opt"], params, lr, opt_cfg)
+        if isinstance(opt_cfg, optim_lib.OptimSpec):
+            new_params, new_opt, om, _ = optim_state_update(
+                gp, state["opt"], params, lr, opt_cfg)
+        else:
+            new_params, new_opt, om = optim.adamw_update(
+                gp, state["opt"], params, lr, opt_cfg)
         new_state = dict(state, params=new_params, opt=new_opt,
                          step=state["step"] + 1)
         return new_state, {"loss": loss, "lr": lr, **om}

@@ -1,0 +1,30 @@
+"""Factored + low-rank optimizer-state subsystem.
+
+``OptimSpec`` (per-leaf state layouts by glob rule — dense | factored
+CAME | low-rank projected moments) replaces the monolithic
+``train.optim.AdamWConfig`` knob; ``RankSchedule``/``RankController``
+drive the low-rank subspace size through the same plateau-quantized,
+signature-keyed compile cache that drives sampling budgets.  See
+``optim.spec`` and ``optim.layouts``.
+
+Legacy ``AdamWConfig`` runs are untouched: every step builder accepts
+either type, and an all-dense spec is bit-identical to the old path.
+"""
+from repro.core.controller import RankController  # noqa: F401 (conv.)
+from repro.core.policy import RankSchedule  # noqa: F401 (conv.)
+from repro.optim.layouts import (dense_adamw_bytes, from_legacy_adamw,
+                                 init, init_rank_stats, memory_report,
+                                 migrate_ranks, state_shardings,
+                                 tree_bytes, update, update_rank_stats)
+from repro.optim.spec import (KNOWN_LAYOUTS, LayoutRule, OptimSpec,
+                              as_spec, is_rank_stat_key, rank_stat_key)
+
+__all__ = [
+    "OptimSpec", "LayoutRule", "KNOWN_LAYOUTS", "as_spec",
+    "RankSchedule", "RankController",
+    "init", "update", "migrate_ranks", "from_legacy_adamw",
+    "init_rank_stats", "update_rank_stats",
+    "rank_stat_key", "is_rank_stat_key",
+    "state_shardings", "tree_bytes", "dense_adamw_bytes",
+    "memory_report",
+]

@@ -1,0 +1,398 @@
+"""Per-leaf optimizer-state algebra: init / update / rank migration.
+
+State structure (checkpoint-stable, path-keyed like everything else in
+``train.checkpoint``)::
+
+    {"count": () int32,
+     "leaves": {"unit/0/mlp/wi": {"m": ..., "v": ...},          # dense
+                "unit/0/attn/wq": {"proj": ..., "m": ..., "v": ...},
+                ...}}
+
+The layout of a leaf is carried by its slot names, not re-derived from
+the spec at update time — so a leaf that fell back to dense (vector
+parameter, rank >= matrix extent) stays consistent across update,
+checkpoint and rank migration by construction.
+
+Numerics:
+
+  * dense — exactly ``train.optim.adamw_update``'s per-leaf ops, same
+    order of operations: an all-dense spec is bit-identical to the
+    legacy AdamW path.
+  * factored — Adafactor-style row/col second moments (EMA of the
+    squared gradient's row/col means, rank-1 reconstruction
+    ``v_row x v_col / mean(v_row)``), RMS-clipped normalized update;
+    ``momentum=True`` adds CAME's confidence factors: the update
+    instability ``(u - m)^2`` is factored the same way and divides the
+    momentum step, damping coordinates whose normalized gradient
+    disagrees with the momentum direction.
+  * lowrank — moments live in a rank-r column subspace.  The
+    projection ``P`` (top-r left singular vectors of the gradient) is
+    refreshed every ``refresh_every`` steps inside ``lax.cond``; on
+    refresh the running moments are rotated into the new basis
+    (``t = P_new^T P_old``, ``m <- t m``, ``v <- (t*t) v``) so the
+    trajectory stays continuous (AdaRankGrad / GaLore).  Each update
+    also measures the captured-energy fraction
+    ``||P^T g||^2 / ||g||^2`` — the statistic rank controllers feed on.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.spec import (LayoutRule, OptimSpec, rank_stat_key)
+from repro.train.optim import global_norm
+from repro.train.znorm import N_STATS, STATS_DECAY
+
+_TINY = 1e-30
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def _flatten_params(params):
+    """[(path_string, leaf)], treedef — path strings match the
+    checkpoint key convention ("/"-joined)."""
+    pairs, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return [("/".join(_path_str(x) for x in path), leaf)
+            for path, leaf in pairs], treedef
+
+
+def _effective_rank(rank: int, shape) -> int:
+    """Leaf-level rank clamp: a subspace must be strictly smaller than
+    the matrix (rank >= min extent would cost MORE than dense)."""
+    return min(int(rank), min(shape[-2], shape[-1]) - 1)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(spec: OptimSpec, params,
+         ranks: Optional[Dict[int, int]] = None) -> Dict:
+    """Optimizer state for ``params`` under ``spec``.
+
+    ``ranks``: rank per dynamic-rule index (the scheduled driver's
+    current band positions); defaults to ``spec.initial_ranks()``.
+    Works under ``jax.eval_shape`` for allocation-free abstract state.
+    """
+    eff_ranks = dict(spec.initial_ranks())
+    if ranks:
+        eff_ranks.update({int(i): int(r) for i, r in ranks.items()})
+    leaves = {}
+    for path, p in _flatten_params(params)[0]:
+        idx, rule = spec.resolve_with_index(path)
+        rank = eff_ranks.get(idx, rule.rank if rule else 0)
+        leaves[path] = _init_leaf(p, rule, rank)
+    return {"count": jnp.zeros((), jnp.int32), "leaves": leaves}
+
+
+def _init_leaf(p, rule: Optional[LayoutRule], rank: int) -> Dict:
+    z = lambda shape: jnp.zeros(shape, jnp.float32)
+    layout = rule.layout if rule is not None else "dense"
+    if layout == "factored" and p.ndim >= 2:
+        row = p.shape[:-1]
+        col = p.shape[:-2] + (p.shape[-1],)
+        slots = {"v_row": z(row), "v_col": z(col)}
+        if rule.momentum:
+            slots.update({"m": z(p.shape),
+                          "u_row": z(row), "u_col": z(col)})
+        return slots
+    if layout == "lowrank" and p.ndim >= 2:
+        r = _effective_rank(rank, p.shape)
+        if r >= 1:
+            lead = p.shape[:-2]
+            n, m = p.shape[-2], p.shape[-1]
+            return {"proj": z(lead + (n, r)),
+                    "m": z(lead + (r, m)), "v": z(lead + (r, m))}
+    # dense default + fallback (vectors, degenerate ranks)
+    return {"m": z(p.shape), "v": z(p.shape)}
+
+
+def from_legacy_adamw(adamw_state, params) -> Dict:
+    """Convert a legacy ``train.optim.AdamWState`` (count, m, v
+    pytrees) into the path-keyed dense structure — the restore path for
+    old-format checkpoints under an all-dense spec."""
+    pairs, treedef = _flatten_params(params)
+    flat_m = treedef.flatten_up_to(adamw_state.m)
+    flat_v = treedef.flatten_up_to(adamw_state.v)
+    leaves = {path: {"m": m, "v": v}
+              for (path, _), m, v in zip(pairs, flat_m, flat_v)}
+    return {"count": adamw_state.count, "leaves": leaves}
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+def update(grads, state: Dict, params, lr: jax.Array,
+           spec: OptimSpec):
+    """Returns (new_params, new_state, metrics, rank_energy).
+
+    ``rank_energy``: {controller-rule index: captured-energy scalar}
+    averaged over the rule's low-rank leaves — the statistic
+    ``update_rank_stats`` folds into ``budget_stats`` for the driver's
+    :class:`~repro.core.controller.RankController` loop.  Empty for
+    specs without controller rules.
+    """
+    gnorm = global_norm(grads)
+    if spec.grad_clip_norm > 0:
+        scale = jnp.minimum(1.0, spec.grad_clip_norm
+                            / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - spec.b1 ** cf
+    bc2 = 1.0 - spec.b2 ** cf
+
+    pairs, treedef = _flatten_params(params)
+    flat_g = treedef.flatten_up_to(grads)
+    ctrl_idx = set(spec.controller_rule_indices())
+
+    new_p, new_leaves = [], {}
+    energies: Dict[int, list] = {}
+    for (path, p), g in zip(pairs, flat_g):
+        slots = state["leaves"][path]
+        idx, rule = spec.resolve_with_index(path)
+        if "proj" in slots:
+            p2, s2, energy = _lowrank_update(g, slots, p, lr, spec,
+                                             rule, bc1, bc2, count)
+            if idx in ctrl_idx:
+                energies.setdefault(idx, []).append(energy)
+        elif "v_row" in slots:
+            p2, s2 = _factored_update(g, slots, p, lr, spec, rule, bc2)
+        else:
+            p2, s2 = _dense_update(g, slots, p, lr, spec, bc1, bc2)
+        new_p.append(p2)
+        new_leaves[path] = s2
+    rank_energy = {i: jnp.mean(jnp.stack(es))
+                   for i, es in energies.items()}
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = {"count": count, "leaves": new_leaves}
+    return new_params, new_state, {"grad_norm": gnorm}, rank_energy
+
+
+def _dense_update(g, slots, p, lr, spec: OptimSpec, bc1, bc2):
+    # exactly train.optim.adamw_update's per-leaf ops (bit-identity)
+    g32 = g.astype(jnp.float32)
+    m_new = spec.b1 * slots["m"] + (1 - spec.b1) * g32
+    v_new = spec.b2 * slots["v"] + (1 - spec.b2) * g32 * g32
+    step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + spec.eps)
+    if spec.weight_decay:
+        step = step + spec.weight_decay * p.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+    return p_new, {"m": m_new, "v": v_new}
+
+
+def _rank1_reconstruct(row, col):
+    """Outer-product second-moment estimate, normalized by the row
+    mean (Adafactor eq. 4): row (..., n), col (..., m) -> (..., n, m)."""
+    denom = jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), _TINY)
+    return (row / denom)[..., :, None] * col[..., None, :]
+
+
+def _factored_update(g, slots, p, lr, spec: OptimSpec,
+                     rule: LayoutRule, bc2):
+    g32 = g.astype(jnp.float32)
+    g2 = g32 * g32
+    v_row = spec.b2 * slots["v_row"] + (1 - spec.b2) * jnp.mean(g2, -1)
+    v_col = spec.b2 * slots["v_col"] + (1 - spec.b2) * jnp.mean(g2, -2)
+    vhat = _rank1_reconstruct(v_row / bc2, v_col / bc2)
+    u = g32 / (jnp.sqrt(vhat) + spec.eps)
+    rms = jnp.sqrt(jnp.mean(u * u))
+    u = u / jnp.maximum(1.0, rms / spec.clip_threshold)
+    if rule.momentum:
+        m = spec.b1 * slots["m"] + (1 - spec.b1) * u
+        instab = jnp.square(u - m)
+        u_row = spec.b3 * slots["u_row"] \
+            + (1 - spec.b3) * jnp.mean(instab, -1)
+        u_col = spec.b3 * slots["u_col"] \
+            + (1 - spec.b3) * jnp.mean(instab, -2)
+        step = m / (jnp.sqrt(_rank1_reconstruct(u_row, u_col))
+                    + spec.eps)
+        new_slots = {"m": m, "v_row": v_row, "v_col": v_col,
+                     "u_row": u_row, "u_col": u_col}
+    else:
+        step = u
+        new_slots = {"v_row": v_row, "v_col": v_col}
+    if spec.weight_decay:
+        step = step + spec.weight_decay * p.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+    return p_new, new_slots
+
+
+def _lowrank_update(g, slots, p, lr, spec: OptimSpec, rule: LayoutRule,
+                    bc1, bc2, count):
+    g32 = g.astype(jnp.float32)
+    proj, m, v = slots["proj"], slots["m"], slots["v"]
+    r = proj.shape[-1]
+    refresh_every = rule.refresh_every if rule is not None else 1
+    pred = jnp.equal(jnp.mod(count - 1, refresh_every), 0)
+
+    def refresh(_):
+        u_svd, _, _ = jnp.linalg.svd(g32, full_matrices=False)
+        p_new = u_svd[..., :, :r]
+        t = jnp.swapaxes(p_new, -1, -2) @ proj      # (..., r, r)
+        return p_new, t @ m, (t * t) @ v
+
+    def hold(_):
+        return proj, m, v
+
+    proj, m, v = jax.lax.cond(pred, refresh, hold, None)
+    g_r = jnp.swapaxes(proj, -1, -2) @ g32          # (..., r, m)
+    energy = jnp.sum(g_r * g_r) \
+        / jnp.maximum(jnp.sum(g32 * g32), _TINY)
+    m_new = spec.b1 * m + (1 - spec.b1) * g_r
+    v_new = spec.b2 * v + (1 - spec.b2) * g_r * g_r
+    step_r = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + spec.eps)
+    step = proj @ step_r
+    if spec.weight_decay:
+        step = step + spec.weight_decay * p.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+    return p_new, {"proj": proj, "m": m_new, "v": v_new}, energy
+
+
+# ---------------------------------------------------------------------------
+# rank migration (driver re-plans: pad/truncate the subspace)
+# ---------------------------------------------------------------------------
+
+def migrate_ranks(spec: OptimSpec, state: Dict, params,
+                  new_ranks: Dict[int, int]) -> Dict:
+    """Re-size the low-rank leaves governed by the re-planned rules.
+
+    Rank DOWN keeps the leading columns (singular vectors are
+    energy-ordered, so truncation keeps the dominant subspace); rank UP
+    zero-pads (the next ``refresh_every`` boundary re-orthogonalizes).
+    Leaves that fell back to dense at init stay dense.
+    """
+    leaves = dict(state["leaves"])
+    for path, p in _flatten_params(params)[0]:
+        idx, _ = spec.resolve_with_index(path)
+        if idx not in new_ranks:
+            continue
+        slots = leaves[path]
+        if "proj" not in slots:
+            continue
+        r_new = max(_effective_rank(new_ranks[idx], p.shape), 1)
+        r_old = slots["proj"].shape[-1]
+        if r_new == r_old:
+            continue
+        proj, m, v = slots["proj"], slots["m"], slots["v"]
+        if r_new < r_old:
+            proj = proj[..., :r_new]
+            m, v = m[..., :r_new, :], v[..., :r_new, :]
+        else:
+            pad_p = [(0, 0)] * (proj.ndim - 1) + [(0, r_new - r_old)]
+            pad_m = [(0, 0)] * (m.ndim - 2) \
+                + [(0, r_new - r_old), (0, 0)]
+            proj = jnp.pad(proj, pad_p)
+            m, v = jnp.pad(m, pad_m), jnp.pad(v, pad_m)
+        leaves[path] = {"proj": proj, "m": m, "v": v}
+    return {"count": state["count"], "leaves": leaves}
+
+
+# ---------------------------------------------------------------------------
+# rank statistics (budget_stats plumbing for RankController)
+# ---------------------------------------------------------------------------
+
+def init_rank_stats(spec: OptimSpec) -> Dict[str, jax.Array]:
+    """Neutral (energy=1, count=0) stat vectors, one per
+    controller-carrying rule — same shape/decay contract as the znorm
+    tag stats so they ride ``state['budget_stats']`` unchanged."""
+    base = jnp.zeros((N_STATS,), jnp.float32)
+    base = base.at[0].set(1.0).at[2].set(1.0)
+    return {rank_stat_key(i): base
+            for i in spec.controller_rule_indices()}
+
+
+def update_rank_stats(stats: Dict[str, jax.Array],
+                      rank_energy: Dict[int, jax.Array],
+                      decay: float = STATS_DECAY
+                      ) -> Dict[str, jax.Array]:
+    """EMA the fresh captured-energy fractions into the running
+    vectors (alpha=1 at count 0, like ``znorm.update_stats``).  The
+    energy lands in the ``ess`` slot — the one RankController reads."""
+    out = dict(stats)
+    for i, e in rank_energy.items():
+        k = rank_stat_key(i)
+        prev = out.get(k)
+        if prev is None:
+            continue
+        x = jnp.stack([e, 1.0 - e, e])
+        cnt = prev[N_STATS - 1]
+        alpha = jnp.where(cnt > 0, 1.0 - decay, 1.0)
+        ema = prev[:N_STATS - 1] + alpha * (x - prev[:N_STATS - 1])
+        out[k] = jnp.concatenate([ema, (cnt + 1.0)[None]])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shardings + memory accounting
+# ---------------------------------------------------------------------------
+
+def state_shardings(state: Dict, params, param_shardings, replicated):
+    """Shardings for the path-keyed state: a slot inherits its
+    parameter's sharding when shapes match (dense m/v, factored
+    momentum) and is replicated otherwise (factored vectors, low-rank
+    subspace moments — all tiny)."""
+    pairs, treedef = _flatten_params(params)
+    flat_sh = treedef.flatten_up_to(param_shardings)
+    leaves = {}
+    for (path, p), sh in zip(pairs, flat_sh):
+        leaves[path] = {
+            slot: (sh if tuple(arr.shape) == tuple(p.shape)
+                   else replicated)
+            for slot, arr in state["leaves"][path].items()}
+    return {"count": replicated, "leaves": leaves}
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays or ShapeDtypeStructs."""
+    return sum(math.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def dense_adamw_bytes(params) -> int:
+    """What plain AdamW would hold for ``params``: two fp32 moments
+    per element + the step counter."""
+    return sum(2 * 4 * math.prod(p.shape)
+               for p in jax.tree.leaves(params)) + 4
+
+
+def memory_report(spec: OptimSpec, params,
+                  ranks: Optional[Dict[int, int]] = None) -> Dict:
+    """Allocation-free per-layout byte accounting (via eval_shape).
+
+    Returns ``{"rows": [{layout, leaves, params, state_bytes,
+    dense_bytes}], "state_bytes", "dense_bytes", "ratio"}`` — the
+    §Optimizer memory record for ``launch.report`` and
+    ``bench_memory``."""
+    abstract = jax.eval_shape(lambda p: init(spec, p, ranks=ranks),
+                              params)
+    per_layout: Dict[str, Dict] = {}
+    for path, p in _flatten_params(params)[0]:
+        slots = abstract["leaves"][path]
+        layout = ("lowrank" if "proj" in slots
+                  else "factored" if "v_row" in slots else "dense")
+        row = per_layout.setdefault(
+            layout, {"layout": layout, "leaves": 0, "params": 0,
+                     "state_bytes": 0, "dense_bytes": 0})
+        row["leaves"] += 1
+        row["params"] += math.prod(p.shape)
+        row["state_bytes"] += tree_bytes(slots)
+        row["dense_bytes"] += 2 * 4 * math.prod(p.shape)
+    total = tree_bytes(abstract)
+    dense = dense_adamw_bytes(params)
+    return {"rows": sorted(per_layout.values(),
+                           key=lambda r: -r["state_bytes"]),
+            "state_bytes": total, "dense_bytes": dense,
+            "ratio": dense / max(total, 1)}

@@ -121,7 +121,12 @@ def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> Dict:
 # controllers.
 
 RUN_STATE_KEY = "run_state"
-RUN_STATE_VERSION = 1
+# v2: adds the optimizer-state layout record (``optim_layouts``) and
+# the driver's rank band positions inside ``schedule_state`` — v1
+# records (pre-repro.optim writers) are still readable: every added
+# field has a safe empty default.
+RUN_STATE_VERSION = 2
+_READABLE_RUN_STATE_VERSIONS = (1, 2)
 
 
 def pack_run_state(schedule_state: Optional[Dict] = None,
@@ -145,11 +150,11 @@ def unpack_run_state(manifest: Dict) -> Optional[Dict]:
     if rec is None:
         return None
     v = rec.get("version")
-    if v != RUN_STATE_VERSION:
+    if v not in _READABLE_RUN_STATE_VERSIONS:
         raise ValueError(
-            f"checkpoint run-state record version {v!r} is not "
-            f"{RUN_STATE_VERSION}; refusing to resume from an "
-            f"incompatible writer")
+            f"checkpoint run-state record version {v!r} is not one of "
+            f"{_READABLE_RUN_STATE_VERSIONS}; refusing to resume from "
+            f"an incompatible writer")
     return rec
 
 

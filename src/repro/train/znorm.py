@@ -250,6 +250,12 @@ def update_stats(stats: Dict[str, jax.Array],
         if active_tags is not None and t not in active_tags:
             out[t] = prev
             continue
+        if t not in tap_grads:
+            # not a znorm tag at all (e.g. the optimizer rank-stat keys
+            # repro.optim folds into the same stats dict) — held here,
+            # updated by its own producer
+            out[t] = prev
+            continue
         x = _stat_vector(tap_grads[t], budgets[t])
         cnt = prev[STAT_COUNT]
         alpha = jnp.where(cnt > 0, 1.0 - decay, 1.0)

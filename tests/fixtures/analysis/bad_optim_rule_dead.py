@@ -1,0 +1,9 @@
+"""Fixture: dead optimizer layout rule (PT001).
+
+Checked against an injected param-path universe in tests (the pattern
+below matches no parameter path of any architecture)."""
+from repro.optim import OptimSpec
+
+SPEC = OptimSpec.of(
+    dict(pattern="decoder/*/qkv", layout="factored"),  # PT001: dead
+)

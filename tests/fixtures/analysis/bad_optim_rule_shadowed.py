@@ -1,0 +1,8 @@
+"""Fixture: optimizer layout rule shadowed by an earlier, broader one
+(PT004) — first-match-wins makes the lowrank rule unreachable."""
+from repro.optim import OptimSpec
+
+SPEC = OptimSpec.of(
+    dict(pattern="b0/*", layout="factored"),
+    dict(pattern="b0/attn_q/w", layout="lowrank", rank=8),  # PT004
+)

@@ -1,0 +1,11 @@
+"""Fixture: rank-controller grid unreachable within the horizon (PT008).
+
+Six grid levels behind a 3-step warmup need at least 8 steps (one
+level move per step) to reach the far plateau, but the module declares
+a 4-step horizon — the configured r_min can never be realized.
+"""
+from repro.core import RankController
+
+STEPS = 4
+
+CTRL = RankController(levels=6, warmup=3)  # PT008: needs >= 8 steps

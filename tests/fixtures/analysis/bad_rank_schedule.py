@@ -1,0 +1,14 @@
+"""Fixture: rank schedule that plateaus short of its end rank (PT008).
+
+The run declares a 100-step horizon but anneals the rank toward
+``end_step`` 500: mirroring ``RankSchedule.rank_at``'s plateau
+quantization shows the final realized rank is 26, nowhere near the
+configured end rank 4 — the optimizer-state saving never materializes.
+"""
+from repro.core import RankSchedule
+
+STEPS = 100
+
+ANNEAL = RankSchedule.linear(
+    32, 4, begin_step=0, end_step=500,
+    stages=4)  # PT008: rank_at(100) == 26, not 4

@@ -27,12 +27,25 @@ UNIVERSE = {
 }
 
 
+# Synthetic param-path universe for the optimizer layout rules
+# (repro.optim.OptimSpec patterns match parameter paths, not tags).
+PARAM_UNIVERSE = {
+    "toy-moe": [
+        "embed",
+        "b0/attn_q/w",
+        "b0/mlp_up/w",
+        "b0/norm/gamma",
+    ],
+}
+
+
 def fixture(name):
     return os.path.join(FIX, name)
 
 
 def run_fixture(name, **kw):
     kw.setdefault("tag_universe", UNIVERSE)
+    kw.setdefault("param_universe", PARAM_UNIVERSE)
     return analyze_paths([fixture(name)], **kw)
 
 
@@ -66,6 +79,10 @@ FIXTURE_TABLE = [
     ("bad_policy_cached_rows.py", "PT003"),
     ("bad_policy_shadowed.py", "PT004"),
     ("bad_policy_schedule.py", "PT008"),
+    ("bad_rank_schedule.py", "PT008"),       # RankSchedule anneal
+    ("bad_rank_controller.py", "PT008"),     # RankController grid
+    ("bad_optim_rule_dead.py", "PT001"),     # vs param-path universe
+    ("bad_optim_rule_shadowed.py", "PT004"),
     ("bad_syntax.py", "AN001"),
 ]
 

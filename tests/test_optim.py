@@ -1,0 +1,407 @@
+"""repro.optim: per-leaf optimizer-state layouts (dense / factored /
+low-rank), the rank schedule/controller dynamics, checkpoint
+compatibility across the AdamWState -> path-keyed-layout format change,
+and kill/resume bit-faithfulness through the Run façade."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim as optim_lib
+from repro.api import DataSpec, Run, RunSpec
+from repro.core import RankController, RankSchedule
+from repro.core.controller import TagStats
+from repro.launch import train_steps
+from repro.train import checkpoint, optim
+
+KEY = jax.random.PRNGKey(0)
+
+
+def small_params():
+    """Mirrors the model param-path convention: stacked-layer matrices
+    under unit/<i>/..., a large embed, 1-D norm vectors."""
+    k = iter(jax.random.split(KEY, 8))
+    return {
+        "embed": jax.random.normal(next(k), (16, 6)),
+        "final_norm": {"gamma": jnp.ones((6,))},
+        "unit": {"0": {
+            "mlp": {"wi": jax.random.normal(next(k), (2, 6, 12)) * 0.1,
+                    "wo": jax.random.normal(next(k), (2, 12, 6)) * 0.1},
+            "norm": {"gamma": jnp.ones((2, 6))},
+        }},
+    }
+
+
+def grads_like(params, seed=1):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [jax.random.normal(k, l.shape, l.dtype) * 0.01
+                  for k, l in zip(ks, leaves)])
+
+
+class TestRankSchedule:
+    def test_constant(self):
+        s = RankSchedule.constant(16)
+        assert s.rank_at(0) == s.rank_at(10_000) == 16
+
+    def test_linear_endpoints_and_plateaus(self):
+        s = RankSchedule.linear(32, 8, begin_step=10, end_step=50,
+                                stages=4)
+        assert s.rank_at(0) == 32
+        assert s.rank_at(10_000) == 8
+        ranks = [s.rank_at(t) for t in range(10, 51)]
+        # quantized into at most `stages` plateaus past the start value
+        assert len(set(ranks)) <= 5
+        assert ranks == sorted(ranks, reverse=True)
+
+    def test_never_below_one(self):
+        with pytest.raises(ValueError, match="start >= 1"):
+            RankSchedule.linear(2, 0, begin_step=0, end_step=10)
+        s = RankSchedule.linear(2, 1, begin_step=0, end_step=10)
+        assert s.rank_at(10_000) == 1
+
+
+class TestRankController:
+    def test_grid_spans_bounds(self):
+        c = RankController(r_min=4, r_max=32, levels=4)
+        g = c.grid()
+        assert g[0] == 4 and g[-1] == 32 and list(g) == sorted(g)
+
+    def test_warmup_holds(self):
+        c = RankController(warmup=3)
+        st = TagStats(ess=0.1, cond_rate=0.0, util=0.1, count=1.0)
+        assert c.propose(st, 32, step=5) == 32
+        assert c.propose(None, 32, step=5) == 32
+
+    def test_band_moves(self):
+        c = RankController(r_min=4, r_max=32, levels=4, warmup=0,
+                           lo=0.7, hi=0.97)
+        g = c.grid()
+        hot = TagStats(ess=0.99, cond_rate=0, util=0.99, count=9)
+        cold = TagStats(ess=0.3, cond_rate=0, util=0.3, count=9)
+        mid = TagStats(ess=0.85, cond_rate=0, util=0.85, count=9)
+        # captured energy > hi: the subspace is overkill -> rank down
+        assert c.propose(hot, g[-1], step=9) == g[-2]
+        # energy escaping (< lo) -> rank up
+        assert c.propose(cold, g[0], step=9) == g[1]
+        # inside the band: hold (the hysteresis)
+        assert c.propose(mid, g[1], step=9) == g[1]
+        # pinned at the edges
+        assert c.propose(hot, g[0], step=9) == g[0]
+        assert c.propose(cold, g[-1], step=9) == g[-1]
+
+
+class TestSpecResolution:
+    def test_first_match_wins(self):
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="unit/*/mlp/*", layout="lowrank", rank=8),
+            dict(pattern="unit/*", layout="factored"),
+        )
+        assert spec.layout_for("unit/0/mlp/wi") == "lowrank"
+        assert spec.layout_for("unit/0/attn/wq") == "factored"
+        assert spec.layout_for("embed") == "dense"   # no rule matches
+
+    def test_layouts_used_and_all_dense(self):
+        assert optim_lib.OptimSpec().all_dense
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="a*", layout="factored"))
+        assert not spec.all_dense
+        assert spec.layouts_used() == ("dense", "factored")
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="layout"):
+            optim_lib.LayoutRule.of("*", "svd")
+        with pytest.raises(ValueError, match="lowrank"):
+            optim_lib.LayoutRule.of("*", "factored",
+                                    RankSchedule.constant(8))
+        with pytest.raises(ValueError):
+            optim_lib.LayoutRule(pattern="*", layout="lowrank",
+                                 schedule=RankSchedule.constant(8),
+                                 controller=RankController())
+        with pytest.raises(ValueError):
+            optim_lib.OptimSpec(b1=1.5)
+
+    def test_initial_ranks_follow_schedule_and_controller(self):
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="a*", layout="lowrank",
+                 schedule=RankSchedule.linear(32, 8, 0, 100)),
+            dict(pattern="b*", layout="lowrank",
+                 controller=RankController(r_min=4, r_max=16, levels=4),
+                 rank=16),
+            dict(pattern="c*", layout="lowrank", rank=6),
+        )
+        ranks = spec.initial_ranks()
+        assert ranks[0] == 32
+        assert ranks[1] == 16
+        assert 2 not in ranks        # static rank: not driver-managed
+
+    def test_as_spec(self):
+        cfg = optim.AdamWConfig(weight_decay=0.1)
+        spec = optim_lib.as_spec(cfg)
+        assert isinstance(spec, optim_lib.OptimSpec)
+        assert spec.weight_decay == 0.1 and spec.all_dense
+        with pytest.raises(TypeError):
+            optim_lib.as_spec({"lr": 1.0})
+
+
+class TestDenseBitIdentity:
+    def test_matches_adamw_update_exactly(self):
+        params = small_params()
+        spec = optim_lib.OptimSpec(weight_decay=0.01, grad_clip_norm=1.0)
+        cfg = optim.AdamWConfig(weight_decay=0.01, grad_clip_norm=1.0)
+        st_new = optim_lib.init(spec, params)
+        st_old = optim.adamw_init(params)
+        p_new, p_old = params, params
+        for s in range(3):
+            g = grads_like(params, seed=s)
+            lr = jnp.asarray(0.01)
+            p_new, st_new, m_new, _ = optim_lib.update(
+                g, st_new, p_new, lr, spec)
+            p_old, st_old, m_old = optim.adamw_update(
+                g, st_old, p_old, lr, cfg)
+            assert jax.tree_util.tree_all(jax.tree.map(
+                lambda a, b: jnp.array_equal(a, b), p_new, p_old))
+            assert float(m_new["grad_norm"]) == float(m_old["grad_norm"])
+
+
+class TestFactoredLayout:
+    def test_state_shapes(self):
+        params = small_params()
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="unit/*/mlp/*", layout="factored"))
+        st = optim_lib.init(spec, params)
+        wi = st["leaves"]["unit/0/mlp/wi"]
+        assert wi["v_row"].shape == (2, 6)      # mean over cols
+        assert wi["v_col"].shape == (2, 12)     # mean over rows
+        assert wi["m"].shape == (2, 6, 12)      # CAME keeps momentum
+        assert set(st["leaves"]["embed"]) == {"m", "v"}  # dense default
+
+    def test_momentum_false_is_first_moment_free(self):
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="*", layout="factored", momentum=False))
+        st = optim_lib.init(spec, small_params())
+        wi = st["leaves"]["unit/0/mlp/wi"]
+        assert set(wi) == {"v_row", "v_col"}
+
+    def test_update_steps_and_stays_finite(self):
+        params = small_params()
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="unit/*", layout="factored"))
+        st = optim_lib.init(spec, params)
+        p = params
+        for s in range(3):
+            p, st, m, _ = optim_lib.update(grads_like(params, s), st, p,
+                                           jnp.asarray(0.01), spec)
+        moved = jax.tree.map(lambda a, b: not np.allclose(a, b),
+                             p, params)
+        assert all(jax.tree_util.tree_leaves(moved))
+        assert all(np.all(np.isfinite(l))
+                   for l in jax.tree_util.tree_leaves(p))
+
+
+class TestLowrankLayout:
+    def test_state_shapes_and_vector_fallback(self):
+        params = small_params()
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="*", layout="lowrank", rank=4))
+        st = optim_lib.init(spec, params)
+        wi = st["leaves"]["unit/0/mlp/wi"]
+        assert wi["proj"].shape == (2, 6, 4)
+        assert wi["m"].shape == (2, 4, 12)
+        assert wi["v"].shape == (2, 4, 12)
+        # 1-D gamma cannot be projected: dense fallback
+        assert set(st["leaves"]["final_norm/gamma"]) == {"m", "v"}
+
+    def test_effective_rank_clamped_below_min_dim(self):
+        params = small_params()
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="unit/*", layout="lowrank", rank=64))
+        st = optim_lib.init(spec, params)
+        r = st["leaves"]["unit/0/mlp/wi"]["proj"].shape[-1]
+        assert r == 5                 # min(6, 12) - 1
+
+    def test_refresh_orthonormal_and_energy_reported(self):
+        params = small_params()
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="unit/*", layout="lowrank", rank=4,
+                 controller=RankController(r_min=2, r_max=4, levels=2),
+                 refresh_every=2),
+        )
+        st = optim_lib.init(spec, params, ranks={0: 4})
+        p = params
+        for s in range(2):
+            p, st, _, energy = optim_lib.update(
+                grads_like(params, s), st, p, jnp.asarray(0.01), spec)
+        # step 1 refreshes the projector from the gradient's SVD:
+        # columns must be orthonormal
+        proj = np.asarray(st["leaves"]["unit/0/mlp/wi"]["proj"][0])
+        np.testing.assert_allclose(proj.T @ proj, np.eye(4), atol=1e-5)
+        assert 0 in energy and 0.0 < float(energy[0]) <= 1.0 + 1e-6
+
+    def test_migrate_ranks_pad_and_truncate(self):
+        params = small_params()
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="unit/*", layout="lowrank", rank=4,
+                 controller=RankController(r_min=2, r_max=5, levels=4)),
+        )
+        st = optim_lib.init(spec, params, ranks={0: 4})
+        down = optim_lib.migrate_ranks(spec, st, params, {0: 2})
+        assert down["leaves"]["unit/0/mlp/wi"]["proj"].shape == (2, 6, 2)
+        assert down["leaves"]["unit/0/mlp/wi"]["m"].shape == (2, 2, 12)
+        up = optim_lib.migrate_ranks(spec, down, params, {0: 5})
+        assert up["leaves"]["unit/0/mlp/wi"]["proj"].shape == (2, 6, 5)
+        # padded columns start as zeros (re-orthogonalized next refresh)
+        assert np.allclose(up["leaves"]["unit/0/mlp/wi"]["proj"][..., 2:],
+                           0.0)
+
+
+class TestMemoryReport:
+    def test_compressed_spec_beats_dense(self):
+        params = small_params()
+        spec = optim_lib.OptimSpec.of(
+            dict(pattern="unit/*", layout="lowrank", rank=2),
+            dict(pattern="embed*", layout="factored", momentum=False))
+        rec = optim_lib.memory_report(spec, params)
+        assert rec["state_bytes"] < rec["dense_bytes"]
+        assert rec["ratio"] > 1.0
+        layouts = {r["layout"] for r in rec["rows"]}
+        assert layouts == {"dense", "factored", "lowrank"}
+        assert optim_lib.memory_report(
+            optim_lib.OptimSpec(), params)["ratio"] == pytest.approx(
+                1.0, abs=1e-3)
+
+
+class TestLegacyConversion:
+    def test_from_legacy_adamw_continues_identically(self):
+        params = small_params()
+        cfg = optim.AdamWConfig()
+        st_old = optim.adamw_init(params)
+        g0 = grads_like(params, 0)
+        p_old, st_old, _ = optim.adamw_update(g0, st_old, params,
+                                              jnp.asarray(0.01), cfg)
+        st_conv = optim_lib.from_legacy_adamw(st_old, p_old)
+        spec = optim_lib.OptimSpec()
+        g1 = grads_like(params, 1)
+        p_a, _, _, _ = optim_lib.update(g1, st_conv, p_old,
+                                        jnp.asarray(0.01), spec)
+        p_b, _, _ = optim.adamw_update(g1, st_old, p_old,
+                                       jnp.asarray(0.01), cfg)
+        assert jax.tree_util.tree_all(jax.tree.map(
+            lambda a, b: jnp.array_equal(a, b), p_a, p_b))
+
+
+MIXED_SPEC = optim_lib.OptimSpec.of(
+    dict(pattern="unit/*/mlp/*", layout="lowrank", rank=6,
+         refresh_every=3),
+    dict(pattern="unit/*/attn/*", layout="lowrank",
+         schedule=RankSchedule.linear(8, 4, begin_step=2, end_step=8,
+                                      stages=2)),
+    dict(pattern="embed*", layout="factored", momentum=False),
+)
+
+
+def _spec(tmp_path, optimizer, steps=8):
+    return RunSpec(arch="minicpm-2b", steps=steps, batch_size=4,
+                   optimizer=optimizer, data=DataSpec(seq_len=16,
+                                                      n_samples=16),
+                   checkpoint_dir=str(tmp_path / "ckpt"))
+
+
+def _state_equal(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    return len(fa) == len(fb) and all(
+        np.array_equal(x, y) for x, y in zip(fa, fb))
+
+
+class TestRunIntegration:
+    @pytest.mark.parametrize("optimizer", [
+        optim_lib.OptimSpec.of(dict(pattern="unit/*", layout="factored")),
+        MIXED_SPEC,
+    ], ids=["factored", "mixed_lowrank"])
+    def test_kill_resume_bit_faithful(self, tmp_path, optimizer):
+        run = Run(_spec(tmp_path, optimizer))
+        run.fit(steps=4)
+        run.save()
+        run.fit(steps=8)
+
+        resumed = Run.restore(_spec(tmp_path, optimizer))
+        assert int(resumed.state["step"]) == 4
+        resumed.fit(steps=8)
+        assert _state_equal(run.state, resumed.state)
+        assert resumed.schedule_state.ranks == run.schedule_state.ranks
+
+    def test_legacy_adamw_checkpoint_restores_under_dense_spec(
+            self, tmp_path):
+        legacy = Run(_spec(tmp_path, optim.AdamWConfig()))
+        legacy.fit(steps=4)
+        legacy.save()
+        legacy.fit(steps=8)
+
+        spec = _spec(tmp_path, optim_lib.OptimSpec.from_adamw(
+            optim.AdamWConfig()))
+        resumed = Run.restore(spec)
+        assert "leaves" in resumed.state["opt"]       # converted format
+        resumed.fit(steps=8)
+        # dense layout is bit-identical AdamW: continuation matches the
+        # uninterrupted legacy run exactly
+        assert _state_equal(legacy.state["params"],
+                            resumed.state["params"])
+
+    def test_legacy_checkpoint_rejects_compressed_spec(self, tmp_path):
+        legacy = Run(_spec(tmp_path, optim.AdamWConfig()))
+        legacy.fit(steps=2)
+        legacy.save()
+        with pytest.raises(ValueError, match="legacy dense-AdamW"):
+            Run.restore(_spec(tmp_path, MIXED_SPEC))
+
+    def test_new_checkpoint_rejects_adamw_config(self, tmp_path):
+        run = Run(_spec(tmp_path, MIXED_SPEC))
+        run.fit(steps=2)
+        run.save()
+        with pytest.raises(ValueError, match="OptimSpec.from_adamw"):
+            Run.restore(_spec(tmp_path, optim.AdamWConfig()))
+
+    def test_unknown_layout_in_manifest_rejected(self, tmp_path):
+        run = Run(_spec(tmp_path, MIXED_SPEC))
+        run.fit(steps=2)
+        run.save()
+        import json
+        import os
+        step_dir = tmp_path / "ckpt" / f"step_{2:010d}"
+        mpath = os.path.join(step_dir, "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest["metadata"][checkpoint.RUN_STATE_KEY][
+            "optim_layouts"] = ["blockdiag"]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(ValueError, match="blockdiag"):
+            Run.restore(_spec(tmp_path, MIXED_SPEC))
+
+    def test_schedule_state_v1_record_readable(self):
+        st = train_steps.ScheduleState(budgets={0: 0.3}, replans=1,
+                                       trajectory=[{"step": 0}])
+        d = st.to_json()
+        assert d["version"] == 2
+        v1 = {"version": 1, "budgets": {"0": 0.3}, "replans": 1,
+              "trajectory": [{"step": 0}]}
+        got = train_steps.ScheduleState.from_json(v1)
+        assert got.budgets == {0: 0.3} and got.ranks == {}
+        with pytest.raises(ValueError):
+            train_steps.ScheduleState.from_json(dict(d, version=99))
+
+    def test_run_state_v1_record_readable(self):
+        rec = {"metadata": {checkpoint.RUN_STATE_KEY: {"version": 1}}}
+        assert checkpoint.unpack_run_state(rec)["version"] == 1
+        bad = {"metadata": {checkpoint.RUN_STATE_KEY: {"version": 99}}}
+        with pytest.raises(ValueError):
+            checkpoint.unpack_run_state(bad)
+
+    def test_report_carries_optimizer_memory_section(self, tmp_path):
+        run = Run(_spec(tmp_path, MIXED_SPEC))
+        run.fit(steps=4)
+        rep = run.report()
+        assert "§Optimizer memory" in rep
+        assert "x** reduction" in rep

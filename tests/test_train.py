@@ -67,6 +67,22 @@ class TestSchedules:
         f = optim.cosine(1e-3, 1000, warmup=10, final_frac=0.1)
         assert float(f(jnp.asarray(999))) == pytest.approx(1e-4, rel=0.05)
 
+    @pytest.mark.parametrize("total_steps", [5, 10])
+    def test_cosine_total_steps_not_above_warmup_stays_finite(
+            self, total_steps):
+        # total_steps <= warmup makes the post-warmup span zero; the
+        # schedule must divide by a clamped denominator, not by 0
+        f = optim.cosine(1e-3, total_steps, warmup=10)
+        for s in (0, 4, 9, 10, 50):
+            v = float(f(jnp.asarray(s)))
+            assert np.isfinite(v) and 0.0 <= v <= 1e-3 * (1 + 1e-5)
+
+    def test_wsd_total_steps_not_above_warmup_stays_finite(self):
+        f = optim.wsd(1e-3, total_steps=10, warmup=10, decay_frac=0.0)
+        for s in (0, 9, 10, 50):
+            v = float(f(jnp.asarray(s)))
+            assert np.isfinite(v) and 0.0 <= v <= 1e-3 * (1 + 1e-5)
+
 
 class TestCheckpoint:
     def test_roundtrip_and_retention(self, tmp_path):
